@@ -1,0 +1,41 @@
+"""Paper Tables 6 & 8: training-set size ablation ("10 min" vs "1 h" of
+interictal signal per hour).  The paper's finding: the SMALLER set gets
+higher train accuracy (overfit) but the BIGGER set generalizes better on
+the test timeline."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows
+from repro.configs.eeg_paper import CONFIG
+from repro.signal import eeg_data, pipeline
+
+
+def _accuracy(fitted, rec) -> float:
+    preds = pipeline.predict_windows(fitted, rec.windows, CONFIG)
+    return float(jnp.mean((preds == rec.labels).astype(jnp.float32))) * 100
+
+
+def run(rows: Rows, pid: int = 11) -> None:
+    key = jax.random.PRNGKey(300 + pid)
+    ks = jax.random.split(key, 6)
+    small = eeg_data.make_training_set(ks[0], pid, 30, 30)       # "10 min"
+    big = eeg_data.make_training_set(ks[1], pid, 120, 120)     # "1 h"
+    test = eeg_data.make_test_timeline(ks[2], pid, hours_interictal=1)
+
+    for name, rec, kf in (("10min", small, ks[3]), ("1h", big, ks[4])):
+        fitted = pipeline.fit(kf, rec, CONFIG)
+        train_acc = _accuracy(fitted, rec)
+        test_result = pipeline.evaluate_timeline(fitted, test, CONFIG)
+        preds = pipeline.predict_windows(fitted, test.windows, CONFIG)
+        test_acc = float(jnp.mean(
+            (preds == test.labels).astype(jnp.float32))) * 100
+        rows.add(f"table6/train_accuracy/{name}", train_acc,
+                 f"test_acc={test_acc:.1f}pct "
+                 f"lead={float(test_result.lead_time_minutes):.0f}min")
+
+
+if __name__ == "__main__":
+    run(Rows())

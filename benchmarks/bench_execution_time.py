@@ -1,0 +1,83 @@
+"""Paper Tables 2-5, 7, 9: signal-processing / test execution time under
+the four execution modes.  Adaptation (DESIGN.md Sec. 2):
+
+  normal      -- python loop over 8-minute matrices (paper: serial MATLAB)
+  matlab_par  -- one jit'd call on the whole batch (MATLAB's implicit
+                 multithreading analog: library-level parallelism)
+  code_par    -- explicit vmap over matrices (paper's parfor rewrite)
+  hadoop      -- core.mapreduce.MapReduce over the matrices (the paper's
+                 Hadoop job; on this 1-CPU container the speedup vs
+                 code_par is structural, not wall-clock -- the multi-chip
+                 wall-clock claim is what launch/dryrun.py proves)
+
+Paper's claim: code_par ~2x faster than normal; hadoop ~20-30% faster
+still.  We validate the first on real wall-clock and report the second
+as collective-aware structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, time_fn
+from repro.configs.eeg_paper import CONFIG
+from repro.core import mapreduce as mr
+from repro.signal import eeg_data, pipeline
+
+
+def run(rows: Rows, n_chunks: int = 16) -> None:
+    # 16 x 8-minute matrices ~ 2 h of recording: enough work that the
+    # vectorized paths amortize dispatch (at 4 chunks they do not; the
+    # paper's recordings are 24 h)
+    key = jax.random.PRNGKey(0)
+    per = eeg_data.WINDOWS_PER_MATRIX
+    rec = eeg_data.make_training_set(
+        key, 3, n_interictal_windows=per * n_chunks // 2,
+        n_preictal_windows=per * n_chunks // 2)
+    windows = rec.windows  # (n_chunks*60, C, N)
+    matrices = windows.reshape(n_chunks, per, *windows.shape[1:])
+
+    proc = functools.partial(pipeline.process_windows, cfg=CONFIG)
+    proc_jit = jax.jit(proc)
+
+    def normal():
+        # the paper's "Normal execution" is interpreted serial MATLAB:
+        # op-by-op dispatch, one 8-minute matrix at a time
+        with jax.disable_jit():
+            return [jax.block_until_ready(proc(m)) for m in matrices]
+
+    def matlab_par():
+        # MATLAB's implicit multithreading: still one matrix at a time,
+        # but each op library-parallel (= jit per matrix here)
+        return [jax.block_until_ready(proc_jit(m)) for m in matrices]
+
+    vproc = jax.jit(jax.vmap(proc))
+
+    def code_par():
+        return vproc(matrices)
+
+    job = mr.MapReduce(proc, reduce_fn=mr.reduce_concat, axis_name="data")
+
+    def hadoop():
+        return job.run_local(n_chunks, matrices.reshape(-1, *windows.shape[1:]))
+
+    t_normal = time_fn(normal, iters=1)
+    t_matlab = time_fn(matlab_par)
+    t_code = time_fn(code_par)
+    t_hadoop = time_fn(hadoop)
+    rows.add("table2/exec_time/normal", t_normal,
+             "eager serial loop (paper: interpreted MATLAB)")
+    rows.add("table2/exec_time/matlab_parallel", t_matlab,
+             f"jit per matrix; speedup={t_normal / t_matlab:.2f}x")
+    rows.add("table2/exec_time/code_parallel", t_code,
+             f"vmap batch; speedup={t_normal / t_code:.2f}x (paper ~2x)")
+    rows.add("table2/exec_time/hadoop_mapreduce", t_hadoop,
+             f"MapReduce; speedup={t_normal / t_hadoop:.2f}x on 1 device; "
+             "multi-chip scaling via dryrun")
+
+
+if __name__ == "__main__":
+    run(Rows())

@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks: wall-time of the jnp reference paths (what
+the CPU container can measure) + correctness deltas vs the Pallas
+kernels in interpret mode.  TPU wall-times come from the roofline model
+(benchmarks/roofline.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, time_fn
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.gram import ops as gram_ops
+from repro.kernels.wpd import ops as wpd_ops
+
+
+def run(rows: Rows) -> None:
+    key = jax.random.PRNGKey(0)
+
+    # WPD analysis level (paper's hot loop): 8-min matrix (180 rows x 2048)
+    x = jax.random.normal(key, (180, 2048), jnp.float32)
+    t = time_fn(lambda: wpd_ops.wpd_level(x, use_pallas=False))
+    rows.add("kernels/wpd_level/ref_180x2048", t, "db4, one level")
+    a_ref, d_ref = wpd_ops.wpd_level(x, use_pallas=False)
+    a_k, d_k = wpd_ops.wpd_level(x, use_pallas=True, block_b=64)
+    err = float(jnp.max(jnp.abs(a_ref - a_k)) + jnp.max(jnp.abs(d_ref - d_k)))
+    rows.add("kernels/wpd_level/interpret_err", err, "pallas vs ref")
+
+    # Gram (X^T X for MSPCA / rotation PCA)
+    x = jax.random.normal(key, (2048, 180), jnp.float32)
+    t = time_fn(lambda: gram_ops.gram(x, use_pallas=False))
+    rows.add("kernels/gram/ref_2048x180", t, "")
+    g_ref = gram_ops.gram(x, use_pallas=False)
+    g_k = gram_ops.gram(x, use_pallas=True)
+    rows.add("kernels/gram/interpret_err",
+             float(jnp.max(jnp.abs(g_ref - g_k))), "pallas vs ref")
+
+    # Flash attention (prefill hot spot of the model zoo)
+    q = jax.random.normal(key, (1, 1024, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(key, (1, 1024, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(key, (1, 1024, 2, 64), jnp.bfloat16)
+    t = time_fn(lambda: fa_ops.flash_attention(q, k, v, use_pallas=False))
+    rows.add("kernels/flash_attention/ref_1k_gqa", t, "S=1024 H=4 KV=2")
+    o_ref = fa_ops.flash_attention(q, k, v, use_pallas=False)
+    o_k = fa_ops.flash_attention(q, k, v, use_pallas=True,
+                                 block_q=256, block_k=256)
+    rows.add("kernels/flash_attention/interpret_err",
+             float(jnp.max(jnp.abs(o_ref.astype(jnp.float32)
+                                   - o_k.astype(jnp.float32)))),
+             "pallas vs ref")
+
+
+if __name__ == "__main__":
+    run(Rows())

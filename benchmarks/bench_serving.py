@@ -1,0 +1,37 @@
+"""Serving throughput: tokens/s of the batched decode engine (reduced
+configs on CPU -- the relative batch scaling is the signal; absolute TPU
+rates come from the decode rooflines)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.configs import get_config
+from repro.models import build
+from repro.serving import ServeEngine
+
+
+def run(rows: Rows, arch: str = "qwen3-0.6b") -> None:
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    for batch in (1, 4):
+        engine = ServeEngine(model, params, max_batch=batch, max_seq=96)
+        prompts = [rng.integers(2, cfg.vocab_size, size=8).astype(np.int32)
+                   for _ in range(batch)]
+        engine.generate(prompts, max_new=4)     # warmup/compile
+        t0 = time.time()
+        outs = engine.generate(prompts, max_new=16)
+        dt = time.time() - t0
+        n = sum(len(o) for o in outs)
+        rows.add(f"serving/decode_tok_per_s/b{batch}", n / dt * 1e6 / 1e6,
+                 f"{n} tokens in {dt:.2f}s (reduced {arch})")
+
+
+if __name__ == "__main__":
+    run(Rows())

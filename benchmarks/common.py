@@ -1,0 +1,33 @@
+"""Shared benchmark helpers: timing + CSV rows."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+class Rows:
+    def __init__(self):
+        self.rows: list[tuple] = []
+
+    def add(self, name: str, us_per_call: float | str, derived: str = ""):
+        self.rows.append((name, us_per_call, derived))
+        if isinstance(us_per_call, float):
+            print(f"{name},{us_per_call:.1f},{derived}")
+        else:
+            print(f"{name},{us_per_call},{derived}")

@@ -1,0 +1,65 @@
+"""Roofline reporting: turn dry-run JSONL records into the §Roofline
+table (EXPERIMENTS.md).  Single-pod records only, per the brief; the
+multi-pod records prove the 'pod' axis shards."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_final.jsonl")
+
+
+def load(path: str = RESULTS) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    records = []
+    with open(path) as f:
+        for line in f:
+            records.append(json.loads(line))
+    return records
+
+
+def table(records: list[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bound | "
+        "useful-FLOPs | fits HBM |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"skip: {r['skipped'][:40]} | - | - |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"ERROR | - | - |")
+            continue
+        ur = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['bottleneck']} | {ur:.3f} | "
+            f"{'yes' if r.get('fits_hbm') else 'NO'} |")
+    return "\n".join(lines)
+
+
+def run(rows) -> None:
+    records = load()
+    if not records:
+        rows.add("roofline/records", 0.0, "run launch/dryrun.py --all first")
+        return
+    ok = [r for r in records if "skipped" not in r and "error" not in r]
+    fits = [r for r in ok if r.get("fits_hbm")]
+    rows.add("roofline/records", float(len(records)),
+             f"compiled={len(ok)} fits_hbm={len(fits)}")
+    for bound in ("compute", "memory", "collective"):
+        n = sum(1 for r in ok if r.get("bottleneck") == bound)
+        rows.add(f"roofline/bottleneck/{bound}", float(n), "single+multi pod")
+
+
+if __name__ == "__main__":
+    print(table(load()))

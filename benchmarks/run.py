@@ -1,0 +1,55 @@
+"""Benchmark harness entrypoint: one bench per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only substr]
+
+CSV rows: ``name,us_per_call_or_value,derived``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on bench module name")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_dataset_size, bench_execution_time,
+                            bench_kernels, bench_mspca_denoise,
+                            bench_prediction_timeline, bench_serving,
+                            bench_training_accuracy, roofline)
+    from benchmarks.common import Rows
+
+    benches = [
+        ("bench_training_accuracy", bench_training_accuracy.run),
+        ("bench_execution_time", bench_execution_time.run),
+        ("bench_prediction_timeline", bench_prediction_timeline.run),
+        ("bench_dataset_size", bench_dataset_size.run),
+        ("bench_mspca_denoise", bench_mspca_denoise.run),
+        ("bench_kernels", bench_kernels.run),
+        ("bench_serving", bench_serving.run),
+        ("roofline", roofline.run),
+    ]
+    rows = Rows()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            fn(rows)
+        except Exception as e:  # keep the harness going; report
+            failures += 1
+            rows.add(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: build an assigned architecture, train a few steps, decode.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch qwen3-0.6b]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.base import InputShape
+from repro.data.synthetic import make_batch
+from repro.models import build
+from repro.optim import AdamWConfig, adamw
+from repro.serving import ServeEngine
+from repro.training import TrainState, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_NAMES)
+    ap.add_argument("--steps", type=int, default=10)
+    args = ap.parse_args()
+
+    # 1. Config + model (reduced variant: CPU-sized, same topology).
+    cfg = get_config(args.arch).reduced()
+    model = build(cfg)
+    print(f"{cfg.name}: {model.param_count():,} params")
+
+    # 2. A few train steps on synthetic token data.
+    opt = adamw(AdamWConfig(lr=1e-3))
+    params = model.init(jax.random.PRNGKey(0))
+    state = TrainState(params, opt.init(params))
+    step = jax.jit(make_train_step(model, opt))
+    shape = InputShape("quickstart", 64, 4, "train")
+    for i in range(args.steps):
+        state, metrics = step(state, make_batch(cfg, shape, seed=i))
+        print(f"step {i}: loss={float(metrics['loss']):.4f}")
+
+    # 3. Serve: batched prefill + greedy decode with a KV/state cache.
+    if not cfg.is_encoder:
+        engine = ServeEngine(model, state.params, max_batch=2, max_seq=96)
+        import numpy as np
+        prompts = [np.array([5, 6, 7], np.int32), np.array([9, 8], np.int32)]
+        outs = engine.generate(prompts, max_new=8)
+        for i, o in enumerate(outs):
+            print(f"generated[{i}]: {o.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

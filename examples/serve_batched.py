@@ -1,0 +1,81 @@
+"""Batched serving demo: prefill + cached greedy decode for a
+decode-capable assigned arch, with per-request stop handling.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch zamba2-7b
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import build
+from repro.serving import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-7b", choices=ARCH_NAMES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--continuous", action="store_true",
+                    help="vLLM-style slot scheduler: more requests than "
+                         "slots, refilled mid-flight (per-slot positions)")
+    args = ap.parse_args()
+
+    if args.continuous:
+        from repro.serving import ContinuousEngine, Request
+        cfg = get_config(args.arch).reduced()
+        if cfg.is_encoder:
+            raise SystemExit("encoder-only arch: pick a decoder")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        reqs = [Request(rng.integers(2, cfg.vocab_size,
+                                     size=int(rng.integers(3, 12)))
+                        .astype(np.int32),
+                        max_new=int(rng.integers(4, args.max_new + 1)))
+                for _ in range(args.batch * 2)]   # 2x oversubscribed
+        engine = ContinuousEngine(model, params, max_batch=args.batch,
+                                  max_seq=128, eos_id=-1)
+        t0 = time.time()
+        engine.serve(reqs)
+        dt = time.time() - t0
+        n = sum(len(r.out) for r in reqs)
+        for i, r in enumerate(reqs):
+            print(f"[serve-cb] req{i} ({len(r.prompt)} prompt toks) -> "
+                  f"{r.out}")
+        print(f"[serve-cb] {len(reqs)} reqs on {args.batch} slots: "
+              f"{n} tokens in {dt:.1f}s")
+        return
+
+    cfg = get_config(args.arch).reduced()
+    if cfg.is_encoder:
+        raise SystemExit("encoder-only arch: pick a decoder")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_batch=args.batch, max_seq=128)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size,
+                            size=int(rng.integers(4, 20))).astype(np.int32)
+               for _ in range(args.batch)]
+    print(f"[serve] {args.batch} ragged requests "
+          f"(lens {[len(p) for p in prompts]}) on {cfg.name}")
+    t0 = time.time()
+    outs = engine.generate(prompts, max_new=args.max_new)
+    dt = time.time() - t0
+    for i, o in enumerate(outs):
+        print(f"[serve] response {i}: {o.tolist()}")
+    n = sum(len(o) for o in outs)
+    print(f"[serve] {n} tokens in {dt:.2f}s ({n / dt:.1f} tok/s incl. "
+          "compile; cache shapes = "
+          f"{jax.tree.map(lambda s: s.shape, model.cache_shapes(args.batch, 128))['pos'] or ''}ok)")
+
+
+if __name__ == "__main__":
+    main()

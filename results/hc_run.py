@@ -1,0 +1,12 @@
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import run_one
+
+out, arch, shape = sys.argv[1], sys.argv[2], sys.argv[3]
+kw = json.loads(sys.argv[4]) if len(sys.argv) > 4 else {}
+kw.setdefault("microbatches", None)
+rec = run_one(arch, shape, **kw)
+rec["variant"] = sys.argv[5] if len(sys.argv) > 5 else "opt"
+with open(out, "a") as f:
+    f.write(json.dumps(rec) + "\n")

@@ -1,0 +1,25 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import run_one
+
+out = "results/dryrun_opt.jsonl"
+jobs = []
+for arch in ("qwen3-moe-30b-a3b", "phi3.5-moe-42b-a6.6b"):
+    for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        for mp in (False, True):
+            jobs.append((arch, shape, dict(multi_pod=mp)))
+# pair A best variant on both meshes
+for mp in (False, True):
+    jobs.append(("deepseek-coder-33b", "prefill_32k",
+                 dict(multi_pod=mp, context_parallel=True)))
+for arch, shape, kw in jobs:
+    kw.setdefault("microbatches", None)
+    try:
+        rec = run_one(arch, shape, **kw)
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape, "error": str(e)[:200]}
+    rec["variant"] = "optimized"
+    with open(out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+print("done")

@@ -1,0 +1,20 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import run_one
+from repro.configs import ARCH_NAMES
+
+out = "results/dryrun_rerun.jsonl"
+pairs = [(a, "prefill_32k") for a in ARCH_NAMES]
+pairs += [(a, "train_4k") for a in ("qwen3-moe-30b-a3b", "phi3.5-moe-42b-a6.6b")]
+for arch, shape in pairs:
+    for mp in (False, True):
+        try:
+            rec = run_one(arch, shape, multi_pod=mp, microbatches=None)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "error": f"{type(e).__name__}: {e}"}
+        with open(out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+print("rerun done")

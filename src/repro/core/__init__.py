@@ -1,0 +1,13 @@
+"""Core paper contribution: MapReduce-distributed Rotation Forest.
+
+Submodules:
+  pca             -- PCA primitives (MSPCA + rotation subsets).
+  decision_tree   -- vectorized fixed-depth histogram trees.
+  rotation_forest -- Rodriguez et al. 2006 ensemble, vmapped.
+  mapreduce       -- Hadoop-style map/shuffle/reduce on shard_map.
+  ensemble        -- distributed bagging for any model (T1 in DESIGN.md).
+"""
+
+from repro.core import decision_tree, ensemble, mapreduce, pca, rotation_forest
+
+__all__ = ["decision_tree", "ensemble", "mapreduce", "pca", "rotation_forest"]

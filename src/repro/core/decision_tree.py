@@ -1,0 +1,222 @@
+"""Vectorized fixed-depth decision trees in pure JAX.
+
+The Rotation Forest base learner. Classic recursive CART does not map to
+an accelerator; we instead build *histogram* trees level-synchronously
+(the construction used by LightGBM/XGBoost `hist` and by every
+accelerator GBDT): features are quantile-binned to ``n_bins`` integer
+codes, and at each depth every node's best (feature, threshold) split is
+found from a weighted class histogram computed with one scatter-add over
+the whole dataset. Everything is static-shaped, so a single tree fit is
+jit-able and a forest is a ``vmap`` over trees -- which is exactly what
+the MapReduce layer shards across devices.
+
+Heap node indexing: root = 1, children of i = (2i, 2i+1); depth-D tree has
+2**D leaves with heap ids [2**D, 2**(D+1)).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TreeParams(NamedTuple):
+    """A fitted tree (all arrays static-shaped).
+
+    split_feature : (2**depth,) int32 -- feature per internal heap node
+                    (index into the heap, entry 0 unused). -1 = no split
+                    (node sends everything left).
+    split_bin     : (2**depth,) int32 -- go left iff binned value <= split_bin.
+    leaf_probs    : (2**depth, C) float32 class distribution per leaf.
+    bin_edges     : (F, n_bins - 1) float32 quantile edges used to bin
+                    raw features at predict time.
+    """
+
+    split_feature: jax.Array
+    split_bin: jax.Array
+    leaf_probs: jax.Array
+    bin_edges: jax.Array
+
+    @property
+    def depth(self) -> int:
+        return int(self.leaf_probs.shape[0]).bit_length() - 1
+
+
+def compute_bin_edges(x: jax.Array, n_bins: int) -> jax.Array:
+    """(F, n_bins-1) quantile bin edges per feature."""
+    qs = jnp.linspace(0.0, 1.0, n_bins + 1)[1:-1]
+    return jnp.quantile(x, qs, axis=0).T.astype(jnp.float32)
+
+
+def bin_features(x: jax.Array, bin_edges: jax.Array) -> jax.Array:
+    """Digitize (N, F) raw features into int32 codes in [0, n_bins)."""
+    # searchsorted per feature; vmap over the feature axis.
+    return jax.vmap(jnp.searchsorted, in_axes=(0, 1), out_axes=1)(
+        bin_edges, x.astype(jnp.float32)
+    ).astype(jnp.int32)
+
+
+def _gini_gain(hist_left: jax.Array, hist_parent: jax.Array) -> jax.Array:
+    """Weighted Gini impurity of a candidate split.
+
+    hist_left   : (..., C) class mass going left.
+    hist_parent : (..., C) class mass at the node.
+    Returns the *negative* weighted child impurity (higher = better).
+    """
+    hist_right = hist_parent - hist_left
+    n_l = jnp.sum(hist_left, -1)
+    n_r = jnp.sum(hist_right, -1)
+    n = n_l + n_r
+
+    def gini(h, cnt):
+        p = h / jnp.maximum(cnt[..., None], 1e-12)
+        return 1.0 - jnp.sum(p * p, -1)
+
+    w = (n_l * gini(hist_left, n_l) + n_r * gini(hist_right, n_r)) / jnp.maximum(n, 1e-12)
+    return -w
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "n_classes", "n_bins", "min_samples"))
+def fit_binned(
+    xb: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    *,
+    depth: int,
+    n_classes: int,
+    n_bins: int,
+    min_samples: int = 2,
+    bin_edges: jax.Array | None = None,
+) -> TreeParams:
+    """Fit a depth-``depth`` tree on pre-binned features.
+
+    xb : (N, F) int32 bin codes.   y : (N,) int32 labels.
+    w  : (N,) float32 sample weights (0 masks a sample out -- this is how
+         bootstrap subsampling stays static-shaped).
+    """
+    n, f = xb.shape
+    max_nodes = 2**depth  # internal heap slots we materialize per level <= 2**(depth-1), leaves = 2**depth
+
+    split_feature = jnp.full((max_nodes,), -1, jnp.int32)
+    split_bin = jnp.full((max_nodes,), n_bins, jnp.int32)
+    assignment = jnp.ones((n,), jnp.int32)  # heap id per sample, root = 1
+
+    # NOTE: per-level histogram shapes differ (2**level nodes), so this is a
+    # Python loop -- unrolled at trace time (depth is a static argument).
+    for level in range(depth):
+        nodes_at = 2**level  # heap ids [nodes_at, 2*nodes_at)
+        local = assignment - nodes_at  # (N,) in [0, nodes_at) -- valid by construction
+
+        # ---- histogram: (F, nodes_at * n_bins, C) via one scatter-add ----
+        flat_idx = local[:, None] * n_bins + xb  # (N, F)
+        hist = jnp.zeros((f, nodes_at * n_bins, n_classes), jnp.float32)
+        hist = hist.at[
+            jnp.arange(f)[None, :], flat_idx, y[:, None]
+        ].add(w[:, None])
+        hist = hist.reshape(f, nodes_at, n_bins, n_classes)
+
+        parent = jnp.sum(hist, axis=2)  # (F, nodes_at, C) -- same for all f
+        left_cum = jnp.cumsum(hist, axis=2)  # split at bin b => bins <= b go left
+        gain = _gini_gain(left_cum, parent[:, :, None, :])  # (F, nodes_at, n_bins)
+        # Disallow the degenerate "everything left" split (last bin).
+        gain = gain.at[:, :, -1].set(-jnp.inf)
+        # Disallow splits sending zero mass to a side.
+        n_left = jnp.sum(left_cum, -1)
+        n_tot = jnp.sum(parent, -1)[:, :, None]
+        valid = (n_left > 0) & (n_tot - n_left > 0)
+        gain = jnp.where(valid, gain, -jnp.inf)
+
+        flat_gain = gain.transpose(1, 0, 2).reshape(nodes_at, f * n_bins)
+        best = jnp.argmax(flat_gain, axis=1)
+        best_gain = jnp.take_along_axis(flat_gain, best[:, None], axis=1)[:, 0]
+        best_feat = (best // n_bins).astype(jnp.int32)
+        best_bin = (best % n_bins).astype(jnp.int32)
+
+        # A node splits only if it has >= min_samples and a finite gain and
+        # is not pure.
+        node_n = jnp.sum(parent[0], -1)  # (nodes_at,)
+        node_gini = 1.0 - jnp.sum(
+            (parent[0] / jnp.maximum(node_n[:, None], 1e-12)) ** 2, -1
+        )
+        do_split = (node_n >= min_samples) & jnp.isfinite(best_gain) & (node_gini > 1e-9)
+        best_feat = jnp.where(do_split, best_feat, -1)
+        best_bin = jnp.where(do_split, best_bin, n_bins)  # everything goes left
+
+        # Scatter this level's decisions into the heap-indexed arrays.
+        heap_ids = nodes_at + jnp.arange(nodes_at)
+        split_feature = split_feature.at[heap_ids].set(best_feat)
+        split_bin = split_bin.at[heap_ids].set(best_bin)
+
+        # Route samples. Dead nodes (feat == -1, bin == n_bins) send all left.
+        samp_feat = jnp.where(best_feat[local] < 0, 0, best_feat[local])
+        go_right = (
+            xb[jnp.arange(n), samp_feat] > best_bin[local]
+        ).astype(jnp.int32)
+        assignment = 2 * assignment + go_right
+
+    # ---- leaf class distributions ----
+    leaf_local = assignment - 2**depth  # (N,) in [0, 2**depth)
+    leaf_hist = jnp.zeros((2**depth, n_classes), jnp.float32)
+    leaf_hist = leaf_hist.at[leaf_local, y].add(w)
+    # Laplace smoothing so empty leaves predict the prior rather than NaN.
+    prior = jnp.sum(leaf_hist, axis=0)
+    prior = prior / jnp.maximum(jnp.sum(prior), 1e-12)
+    leaf_n = jnp.sum(leaf_hist, -1, keepdims=True)
+    leaf_probs = (leaf_hist + 1e-3 * prior[None, :]) / (leaf_n + 1e-3)
+
+    if bin_edges is None:
+        bin_edges = jnp.zeros((f, n_bins - 1), jnp.float32)
+    return TreeParams(split_feature, split_bin, leaf_probs, bin_edges)
+
+
+def fit(
+    x: jax.Array,
+    y: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    depth: int = 6,
+    n_classes: int = 2,
+    n_bins: int = 32,
+    min_samples: int = 2,
+) -> TreeParams:
+    """Fit on raw (N, F) float features: quantile-bin then ``fit_binned``."""
+    x = x.astype(jnp.float32)
+    if w is None:
+        w = jnp.ones((x.shape[0],), jnp.float32)
+    edges = compute_bin_edges(x, n_bins)
+    xb = bin_features(x, edges)
+    return fit_binned(
+        xb, y.astype(jnp.int32), w.astype(jnp.float32),
+        depth=depth, n_classes=n_classes, n_bins=n_bins,
+        min_samples=min_samples, bin_edges=edges,
+    )
+
+
+def predict_proba_binned(params: TreeParams, xb: jax.Array) -> jax.Array:
+    """(N, C) class probabilities from pre-binned codes."""
+    n = xb.shape[0]
+    depth = params.depth
+    node = jnp.ones((n,), jnp.int32)
+
+    def step(_, node):
+        feat = params.split_feature[node]
+        thr = params.split_bin[node]
+        safe_feat = jnp.where(feat < 0, 0, feat)
+        val = xb[jnp.arange(n), safe_feat]
+        go_right = ((val > thr) & (feat >= 0)).astype(jnp.int32)
+        return 2 * node + go_right
+
+    node = jax.lax.fori_loop(0, depth, step, node, unroll=True)
+    return params.leaf_probs[node - 2**depth]
+
+
+def predict_proba(params: TreeParams, x: jax.Array) -> jax.Array:
+    xb = bin_features(x, params.bin_edges)
+    return predict_proba_binned(params, xb)
+
+
+def predict(params: TreeParams, x: jax.Array) -> jax.Array:
+    return jnp.argmax(predict_proba(params, x), axis=-1)

@@ -1,0 +1,101 @@
+"""Principal Component Analysis in JAX.
+
+Used three ways in this framework (mirroring the paper):
+  * MSPCA denoising  -- PCA across channels at each wavelet scale (eq. 1).
+  * Rotation Forest  -- per-feature-subset PCA rotations (Sec. 2.3.1).
+  * General utility  -- whitening / dimensionality reduction.
+
+The covariance (Gram) computation can be routed through the Pallas
+``kernels/gram`` tiled kernel for large feature counts; the default is a
+plain ``jnp`` einsum which XLA maps to the MXU anyway.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PCAState(NamedTuple):
+    """Fitted PCA parameters.
+
+    components : (F, F) columns are principal directions, sorted by
+                 decreasing eigenvalue.
+    mean       : (F,) feature means.
+    variances  : (F,) eigenvalues (explained variance per component).
+    """
+
+    components: jax.Array
+    mean: jax.Array
+    variances: jax.Array
+
+
+def _sym_cov(xc: jax.Array, use_kernel: bool = False) -> jax.Array:
+    """(F, F) covariance of centered data ``xc`` of shape (N, F)."""
+    n = xc.shape[0]
+    if use_kernel:
+        # Lazy import: the Pallas kernel is optional on the fit path.
+        from repro.kernels.gram import ops as gram_ops
+
+        g = gram_ops.gram(xc)
+    else:
+        g = jnp.einsum("nf,ng->fg", xc, xc, preferred_element_type=jnp.float32)
+    return g / jnp.maximum(n - 1, 1)
+
+
+def fit(x: jax.Array, use_kernel: bool = False) -> PCAState:
+    """Fit PCA on ``x`` of shape (N, F). All components are kept --
+    Rotation Forest requires the full rotation (Sec. 2.3.1: "All principal
+    components are kept because of preserving the variability data
+    information")."""
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=0)
+    xc = x - mean
+    cov = _sym_cov(xc, use_kernel=use_kernel)
+    # eigh returns ascending eigenvalues; flip to descending.
+    evals, evecs = jnp.linalg.eigh(cov)
+    order = jnp.argsort(-evals)
+    evals = jnp.take(evals, order)
+    evecs = jnp.take(evecs, order, axis=1)
+    # Sign convention: make the largest-|.| entry of each component positive
+    # so fits are deterministic across backends.
+    signs = jnp.sign(evecs[jnp.argmax(jnp.abs(evecs), axis=0), jnp.arange(evecs.shape[1])])
+    evecs = evecs * jnp.where(signs == 0, 1.0, signs)[None, :]
+    return PCAState(components=evecs, mean=mean, variances=jnp.maximum(evals, 0.0))
+
+
+def transform(state: PCAState, x: jax.Array, n_components: int | None = None) -> jax.Array:
+    comps = state.components if n_components is None else state.components[:, :n_components]
+    return (x - state.mean) @ comps
+
+
+def inverse_transform(state: PCAState, scores: jax.Array) -> jax.Array:
+    k = scores.shape[-1]
+    return scores @ state.components[:, :k].T + state.mean
+
+
+def reconstruct(state: PCAState, x: jax.Array, keep: jax.Array | int) -> jax.Array:
+    """Project onto the leading components and back (used by MSPCA).
+
+    ``keep`` may be a traced integer -- we mask components instead of
+    slicing so the function stays jittable with a dynamic component count.
+    """
+    scores = (x - state.mean) @ state.components  # (N, F)
+    f = state.components.shape[1]
+    mask = (jnp.arange(f) < keep).astype(scores.dtype)
+    return (scores * mask) @ state.components.T + state.mean
+
+
+def n_components_for_variance(state: PCAState, frac: float = 0.95) -> jax.Array:
+    """Smallest k capturing ``frac`` of total variance (traceable)."""
+    total = jnp.sum(state.variances)
+    cum = jnp.cumsum(state.variances)
+    return jnp.sum(cum < frac * jnp.maximum(total, 1e-12)) + 1
+
+
+def kaiser_rule(state: PCAState) -> jax.Array:
+    """Number of components with eigenvalue above the mean eigenvalue --
+    the classical selection rule used by MSPCA implementations."""
+    return jnp.maximum(jnp.sum(state.variances > jnp.mean(state.variances)), 1)

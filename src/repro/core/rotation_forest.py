@@ -1,0 +1,152 @@
+"""Rotation Forest (Rodriguez, Kuncheva & Alonso 2006) in pure JAX.
+
+Paper Sec. 2.3.1: for every base tree, the feature set F is randomly split
+into K subsets; PCA is applied to each subset on a bootstrap subsample;
+*all* principal components are kept; the K rotations are assembled into a
+sparse (F, F) rotation matrix R; the tree is trained on X @ R.
+
+Everything is static-shaped: feature subsets are encoded as a permutation
+(so the block-diagonal PCA in permuted space is an exact rotation in the
+original space), and bootstrap subsampling is a 0/1 weight mask. A forest
+fit is ``vmap`` over per-tree RNG keys; the MapReduce layer further shards
+trees/data across the device mesh -- the paper's map phase.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import decision_tree as dt
+from repro.core import pca
+
+
+class RotationForestConfig(NamedTuple):
+    n_trees: int = 10
+    n_subsets: int = 3          # K in the paper
+    depth: int = 6
+    n_classes: int = 2
+    n_bins: int = 32
+    bootstrap_frac: float = 0.75  # paper/ Weka default: 75% instance subsample
+    min_samples: int = 2
+
+
+class RotationForestParams(NamedTuple):
+    """Batched (leading axis = tree) parameters."""
+
+    rotation: jax.Array          # (T, F, F)
+    trees: dt.TreeParams         # all fields have leading T axis
+
+
+def _build_rotation(key: jax.Array, x: jax.Array, cfg: RotationForestConfig) -> jax.Array:
+    """One tree's (F, F) rotation matrix.
+
+    The feature axis is permuted, chopped into K contiguous blocks, PCA is
+    fit per block on a bootstrap subsample, and the block-diagonal matrix
+    of components is un-permuted. Feature counts not divisible by K are
+    handled by padding the permutation with repeats of the last block's
+    features masked out of the PCA (we instead require F % K == 0 at the
+    caller and pad features upstream -- see ``fit``).
+    """
+    n, f = x.shape
+    k = cfg.n_subsets
+    m = f // k
+    perm_key, boot_key = jax.random.split(key)
+    perm = jax.random.permutation(perm_key, f)
+
+    xp = x[:, perm]  # (N, F) permuted features
+    blocks = xp.reshape(n, k, m).transpose(1, 0, 2)  # (K, N, M)
+
+    boot_keys = jax.random.split(boot_key, k)
+
+    def block_pca(bkey, xb):
+        # Bootstrap subsample as a weight mask (static shape).
+        mask = (
+            jax.random.uniform(bkey, (n,)) < cfg.bootstrap_frac
+        ).astype(jnp.float32)
+        # Weighted mean/cov via masked rows.
+        wsum = jnp.maximum(jnp.sum(mask), 2.0)
+        mean = jnp.sum(xb * mask[:, None], 0) / wsum
+        xc = (xb - mean) * mask[:, None]
+        cov = xc.T @ xc / (wsum - 1.0)
+        evals, evecs = jnp.linalg.eigh(cov)
+        order = jnp.argsort(-evals)
+        return jnp.take(evecs, order, axis=1)  # (M, M), all components kept
+
+    comps = jax.vmap(block_pca)(boot_keys, blocks)  # (K, M, M)
+
+    # Assemble block-diagonal in permuted space.
+    rot_p = jnp.zeros((f, f), jnp.float32)
+    for i in range(k):
+        rot_p = jax.lax.dynamic_update_slice(rot_p, comps[i], (i * m, i * m))
+    # Un-permute rows/cols: R = P^T R_p P where P permutes features.
+    inv = jnp.argsort(perm)
+    return rot_p[inv][:, inv]
+
+
+def _fit_one(key: jax.Array, x: jax.Array, y: jax.Array, cfg: RotationForestConfig):
+    rot_key, tree_key = jax.random.split(key)
+    rot = _build_rotation(rot_key, x, cfg)
+    xr = x @ rot
+    # Per-tree bootstrap of training instances (bagging on top of rotation,
+    # as in the Weka implementation the paper used).
+    w = (
+        jax.random.uniform(tree_key, (x.shape[0],)) < cfg.bootstrap_frac
+    ).astype(jnp.float32)
+    edges = dt.compute_bin_edges(xr, cfg.n_bins)
+    xb = dt.bin_features(xr, edges)
+    tree = dt.fit_binned(
+        xb, y, w,
+        depth=cfg.depth, n_classes=cfg.n_classes, n_bins=cfg.n_bins,
+        min_samples=cfg.min_samples, bin_edges=edges,
+    )
+    return rot, tree
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fit(key: jax.Array, x: jax.Array, y: jax.Array, cfg: RotationForestConfig) -> RotationForestParams:
+    """Fit ``cfg.n_trees`` rotation trees (vmapped over tree RNGs).
+
+    x : (N, F) float features -- F must be divisible by ``cfg.n_subsets``
+        (pad features with zeros upstream otherwise; ``features.pad_to``).
+    y : (N,) int labels in [0, n_classes).
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.int32)
+    if x.shape[1] % cfg.n_subsets != 0:
+        pad = cfg.n_subsets - x.shape[1] % cfg.n_subsets
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    keys = jax.random.split(key, cfg.n_trees)
+    rots, trees = jax.vmap(lambda k: _fit_one(k, x, y, cfg))(keys)
+    return RotationForestParams(rotation=rots, trees=trees)
+
+
+def predict_proba(params: RotationForestParams, x: jax.Array) -> jax.Array:
+    """(N, C) ensemble-averaged class probabilities."""
+    x = x.astype(jnp.float32)
+    f = params.rotation.shape[-1]
+    if x.shape[1] < f:
+        x = jnp.pad(x, ((0, 0), (0, f - x.shape[1])))
+
+    def one(rot, tree):
+        return dt.predict_proba(tree, x @ rot)
+
+    probs = jax.vmap(one)(params.rotation, params.trees)  # (T, N, C)
+    return jnp.mean(probs, axis=0)
+
+
+def predict(params: RotationForestParams, x: jax.Array) -> jax.Array:
+    return jnp.argmax(predict_proba(params, x), axis=-1)
+
+
+def accuracy(params: RotationForestParams, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean((predict(params, x) == y).astype(jnp.float32))
+
+
+def merge(a: RotationForestParams, b: RotationForestParams) -> RotationForestParams:
+    """Union of two forests (the MapReduce *reduce* step for training:
+    each map shard trains a sub-forest; the ensemble is their union)."""
+    return jax.tree.map(lambda u, v: jnp.concatenate([u, v], axis=0), a, b)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import make_batch, batch_specs
+
+__all__ = ["make_batch", "batch_specs"]

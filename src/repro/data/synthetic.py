@@ -1,0 +1,98 @@
+"""Synthetic data: batches for every modality (text / audio / vlm), both
+materialized (smoke tests, examples) and as ShapeDtypeStructs (dry-run).
+
+The audio/vlm *frontends are stubs per the brief*: ``frames`` stands in
+for conv-extracted audio features, ``patches`` for SigLIP patch
+embeddings.  Token streams are Zipf-distributed with a deterministic
+n-gram structure so a language model has something learnable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+def _cdt(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _text_seq_len(cfg: ArchConfig, seq_len: int) -> int:
+    """vlm: `seq_len` counts patches + text tokens."""
+    if cfg.modality == "vlm":
+        return seq_len - cfg.n_patches
+    return seq_len
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStructs (dry-run; no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32, dt = jnp.int32, _cdt(cfg)
+
+    def sd(shp, dtype):
+        return jax.ShapeDtypeStruct(shp, dtype)
+
+    if shape.kind == "decode":
+        return {"tokens": sd((b, 1), i32)}
+    st = _text_seq_len(cfg, s)
+    out: dict = {}
+    if cfg.modality == "audio":
+        out["frames"] = sd((b, s, cfg.frontend_dim), dt)
+    elif cfg.modality == "vlm":
+        out["patches"] = sd((b, cfg.n_patches, cfg.d_model), dt)
+        out["tokens"] = sd((b, st), i32)
+    else:
+        out["tokens"] = sd((b, s), i32)
+    if shape.kind == "train":
+        out["targets"] = sd((b, st if cfg.modality != "audio" else s), i32)
+        if cfg.modality == "audio":
+            out["mask"] = sd((b, s), jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Materialized batches (smoke tests / examples)
+# ---------------------------------------------------------------------------
+
+def _zipf_tokens(key: jax.Array, shape: tuple, vocab: int) -> jax.Array:
+    """Zipf-ish marginals + a shift-structure so next-token is learnable."""
+    u = jax.random.uniform(key, shape, jnp.float32, 1e-6, 1.0)
+    ranks = jnp.floor(jnp.exp(u * np.log(vocab))).astype(jnp.int32) - 1
+    base = jnp.clip(ranks, 0, vocab - 1)
+    # deterministic structure: every other token is f(prev)
+    rolled = (base * 31 + 7) % vocab
+    idx = jnp.arange(shape[-1]) % 2
+    return jnp.where(idx == 0, base, jnp.roll(rolled, 1, axis=-1))
+
+
+def make_batch(cfg: ArchConfig, shape: InputShape, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    b, s = shape.global_batch, shape.seq_len
+    dt = _cdt(cfg)
+    if shape.kind == "decode":
+        return {"tokens": _zipf_tokens(key, (b, 1), cfg.vocab_size)}
+
+    st = _text_seq_len(cfg, s)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out: dict = {}
+    if cfg.modality == "audio":
+        out["frames"] = jax.random.normal(k1, (b, s, cfg.frontend_dim), dt)
+        if shape.kind == "train":
+            out["targets"] = _zipf_tokens(k2, (b, s), cfg.vocab_size)
+            out["mask"] = (jax.random.uniform(k3, (b, s)) < 0.08).astype(
+                jnp.float32)  # HuBERT-style masked-frame prediction
+        return out
+    if cfg.modality == "vlm":
+        out["patches"] = jax.random.normal(k1, (b, cfg.n_patches, cfg.d_model),
+                                           dt)
+    toks = _zipf_tokens(k2, (b, st + 1), cfg.vocab_size)
+    out["tokens"] = toks[:, :-1]
+    if shape.kind == "train":
+        out["targets"] = toks[:, 1:]
+    return out

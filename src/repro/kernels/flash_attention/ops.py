@@ -1,0 +1,49 @@
+"""Jit'd public wrapper for flash attention.
+
+Accepts model-layout tensors (B, S, H, hd) with GQA K/V (B, S, K, hd),
+expands KV groups, flattens (B, H) and dispatches to the Pallas kernel on
+TPU (interpret-mode elsewhere) or the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "use_pallas"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 512,
+                    block_k: int = 512,
+                    use_pallas: bool | None = None) -> jax.Array:
+    """q: (B, S, H, hd); k, v: (B, S, K, hd) with H % K == 0."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+    qf, kf, vf = flat(q), flat(k), flat(v)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        out = _kernel.flash_attention(
+            qf, kf, vf, causal=causal,
+            block_q=min(block_q, s), block_k=min(block_k, s),
+            interpret=not _on_tpu())
+    else:
+        out = _ref.attention(qf, kf, vf, causal=causal)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout: q, k, v are (BH, S, hd) -- batch and heads pre-flattened (GQA
+group expansion happens in ops.py).  f32 softmax, causal optional.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True) -> jax.Array:
+    bh, s, hd = q.shape
+    logits = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(hd)
+    if causal:
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        logits = jnp.where(j <= i, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bqk,bkd->bqd", w, v)

@@ -1,0 +1,35 @@
+"""Jit'd public wrapper for the gram kernel.
+
+On CPU (this container) the Pallas TPU kernel runs in interpret mode; on
+TPU it compiles natively. ``use_pallas=False`` falls back to the jnp
+oracle (same numerics, XLA-fused).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.gram import kernel as _kernel
+from repro.kernels.gram import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "block_n", "use_pallas"))
+def gram(
+    x: jax.Array,
+    *,
+    block_f: int = 128,
+    block_n: int = 256,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """Tiled G = X^T X. See kernel.py for the BlockSpec layout."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return _ref.gram(x)
+    return _kernel.gram(x, block_f=block_f, block_n=block_n, interpret=not _on_tpu())

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: SSD intra-chunk step (Mamba2 / mLSTM hot loop).
+
+The chunked linear recurrence (models/scan_core.py) spends its FLOPs in
+two MXU matmuls per chunk -- scores = (q k^T) . decay and y = scores v --
+plus the chunk-state summary.  Unfused, the (L, L) decay/score tiles and
+the (L, Dk/Dv) operands round-trip HBM per chunk (the memory-bound rows
+of §Roofline for zamba2/xlstm).  This kernel fuses the whole intra-chunk
+step in VMEM, emitting y and the chunk state in one pass.
+
+Grid: (BH, n_chunks); each step owns one (L, Dk/Dv) chunk tile.  The
+inter-chunk recurrence stays a tiny lax.scan OUTSIDE the kernel (ops.py)
+-- it is sequential by nature and tiny (Dk x Dv per head).
+
+VMEM at defaults (L=256, Dk=64, Dv=64, f32 accum): q,k,v tiles ~200 KiB,
+decay (L,L) 256 KiB, state accum 16 KiB -- comfortably double-buffered.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_chunk_kernel(q_ref, k_ref, v_ref, ld_ref, hin_ref,
+                      y_ref, state_ref):
+    q = q_ref[0, 0]                       # (L, Dk)
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]                       # (L, Dv)
+    ld = ld_ref[0, 0].astype(jnp.float32)  # (L,)
+    h_in = hin_ref[0, 0].astype(jnp.float32)  # (Dk, Dv)
+    l = q.shape[0]
+
+    cum = jnp.cumsum(ld)               # (L,)
+    rel = cum[:, None] - cum[None, :]  # (L, L)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    decay = jnp.where(rows >= cols, jnp.exp(rel), 0.0)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * decay            # (L, L)
+    y = jax.lax.dot_general(
+        scores.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (L, Dv)
+    # + inter-chunk contribution from the incoming state
+    qdec = q.astype(jnp.float32) * jnp.exp(cum)[:, None]
+    y = y + qdec @ h_in
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # chunk-state summary: state = exp(total) h_in + sum_l dte_l k_l v_l^T
+    dte = jnp.exp(cum[-1] - cum)                               # (L,)
+    kd = k.astype(jnp.float32) * dte[:, None]
+    state = jax.lax.dot_general(
+        kd, v.astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (Dk, Dv)
+    state_ref[0, 0] = state + jnp.exp(cum[-1]) * h_in
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunks(q: jax.Array, k: jax.Array, v: jax.Array, ld: jax.Array,
+               h_in: jax.Array, *, interpret: bool = False):
+    """Batched over chunks: q,k: (BH, NC, L, Dk); v: (BH, NC, L, Dv);
+    ld: (BH, NC, L); h_in: (BH, NC, Dk, Dv) -- the state ENTERING each
+    chunk (from the host-side inter-chunk scan).  Returns
+    (y (BH,NC,L,Dv), state_out (BH,NC,Dk,Dv))."""
+    bh, nc, l, dk = q.shape
+    dv = v.shape[-1]
+    grid = (bh, nc)
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, l, dk), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, l, dk), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, l, dv), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, l), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, dv), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, l, dv), q.dtype),
+            jax.ShapeDtypeStruct((bh, nc, dk, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, ld, h_in)

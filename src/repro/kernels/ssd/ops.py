@@ -1,0 +1,73 @@
+"""Jit'd public wrapper for the SSD chunk kernel: full sequence in, the
+inter-chunk recurrence handled by a host-side lax.scan (tiny, sequential),
+the per-chunk heavy lifting on the MXU via the Pallas kernel.
+
+Two-pass schedule (the standard SSD decomposition):
+  1. chunk summaries with h_in = 0  -> local states;
+  2. scan the tiny (Dk, Dv) recurrence across chunks -> true h_in;
+  3. kernel pass with the true h_in -> exact y.
+Pass 1+3 share the kernel; on TPU pass 1 only needs the state outputs
+(XLA DCEs the unused y).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import kernel as _kernel
+from repro.kernels.ssd import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd_scan(q: jax.Array, k: jax.Array, v: jax.Array, ld: jax.Array, *,
+             chunk: int = 256, use_pallas: bool | None = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """q,k: (BH, S, Dk); v: (BH, S, Dv); ld: (BH, S) log-decay <= 0.
+    Returns (y (BH,S,Dv), final_state (BH,Dk,Dv) f32)."""
+    bh, s, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+
+    def split(t):
+        return t.reshape(bh, nc, chunk, *t.shape[2:])
+
+    qc, kc, vc, ldc = split(q), split(k), split(v), split(ld)
+
+    def run_chunks(h_in):
+        if use_pallas:
+            return _kernel.ssd_chunks(qc, kc, vc, ldc, h_in,
+                                      interpret=not _on_tpu())
+        flat = lambda t: t.reshape(bh * nc, *t.shape[2:])
+        y, st = _ref.ssd_chunk(flat(qc), flat(kc), flat(vc), flat(ldc),
+                               flat(h_in))
+        return (y.reshape(bh, nc, chunk, dv),
+                st.reshape(bh, nc, dk, dv))
+
+    zeros = jnp.zeros((bh, nc, dk, dv), jnp.float32)
+    _, local_states = run_chunks(zeros)           # pass 1: summaries only
+    total = jnp.sum(ldc.astype(jnp.float32), axis=2)  # (BH, NC)
+
+    def step(h, xs):
+        st_c, tot_c = xs                          # (BH,Dk,Dv), (BH,)
+        # local_states already include exp(total)*h_in with h_in=0
+        h_next = h * jnp.exp(tot_c)[:, None, None] + st_c
+        return h_next, h                          # emit state entering chunk
+
+    h_last, h_in = jax.lax.scan(
+        step, jnp.zeros((bh, dk, dv), jnp.float32),
+        (jnp.moveaxis(local_states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)               # (BH, NC, Dk, Dv)
+
+    y, states_out = run_chunks(h_in)              # pass 2: exact outputs
+    return y.reshape(bh, s, dv), states_out[:, -1]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel.
+
+One chunk of the gated linear recurrence (models/scan_core.py):
+
+    y_intra[l] = sum_{m<=l} exp(cum[l]-cum[m]) (q[l].k[m]) v[m]
+    state_out  = sum_l exp(cum[end]-cum[l]) k[l] v[l]^T
+    y          = y_intra + exp(cum[l]) * (q[l] . h_in)
+
+Layout: per (batch*head) row -- q,k: (BH, L, Dk), v: (BH, L, Dv),
+log-decay ld: (BH, L), h_in: (BH, Dk, Dv).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk(q, k, v, ld, h_in):
+    cum = jnp.cumsum(ld.astype(jnp.float32), axis=1)          # (BH, L)
+    rel = cum[:, :, None] - cum[:, None, :]                    # (BH, L, L)
+    li = jnp.arange(q.shape[1])
+    causal = li[:, None] >= li[None, :]
+    decay = jnp.where(causal[None], jnp.exp(rel), 0.0).astype(q.dtype)
+    scores = jnp.einsum("bld,bmd->blm", q, k) * decay
+    y = jnp.einsum("blm,bmv->blv", scores, v)
+    y = y + jnp.einsum("bld,bdv->blv",
+                       q * jnp.exp(cum)[..., None].astype(q.dtype),
+                       h_in.astype(q.dtype))
+    dte = jnp.exp(cum[:, -1:, None] - cum[..., None]).astype(q.dtype)
+    state = jnp.einsum("bld,blv->bdv", k * dte, v).astype(jnp.float32) \
+        + h_in.astype(jnp.float32) \
+        * jnp.exp(cum[:, -1].astype(jnp.float32))[:, None, None]
+    return y, state

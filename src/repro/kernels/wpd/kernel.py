@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: one wavelet-packet analysis level (paper eqs. 2-3).
+
+Computes, for a batch of rows x (B, N) and QMF filters h, g (L taps):
+
+    a[b, n] = sum_k h[k] * x[b, (2n + k) mod N]
+    d[b, n] = sum_k g[k] * x[b, (2n + k) mod N]
+
+TPU adaptation (DESIGN.md Sec. 7): instead of a decimating convolution
+(a gather per output element -- hostile to the VPU), the input row is
+viewed as (N/2, 2) polyphase lanes; tap k then reads lane k%2 circularly
+shifted by k//2. Each shift is two static slices + a concat, so the whole
+level is 2L fused multiply-adds over VMEM-resident tiles -- memory-bound,
+which is the filterbank's roofline anyway (arithmetic intensity ~ L/4
+flops/byte).
+
+Grid: (B / block_b,). Each step owns a (block_b, N) tile of x in VMEM
+(8 s x 256 Hz windows: N = 2048 -> 8 KiB/row f32; block_b = 256 rows ->
+2 MiB, comfortably inside the ~16 MiB v5e VMEM with double buffering).
+The filters ride along as tiny fully-replicated operands.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _roll_rows(x: jax.Array, s: int) -> jax.Array:
+    """Circular left-shift by static s along the last axis (2 slices)."""
+    if s == 0:
+        return x
+    return jnp.concatenate([x[:, s:], x[:, :s]], axis=1)
+
+
+def _wpd_level_kernel(x_ref, h_ref, g_ref, a_ref, d_ref, *, taps: int):
+    x = x_ref[...]  # (bb, N)
+    bb, n = x.shape
+    half = n // 2
+    # Polyphase split: even[b, n] = x[b, 2n], odd[b, n] = x[b, 2n + 1].
+    lanes = x.reshape(bb, half, 2)
+    even = lanes[:, :, 0]
+    odd = lanes[:, :, 1]
+
+    a = jnp.zeros((bb, half), jnp.float32)
+    d = jnp.zeros((bb, half), jnp.float32)
+    for k in range(taps):
+        # x[b, 2n + k] = (k even ? even : odd) shifted left by k // 2.
+        lane = even if k % 2 == 0 else odd
+        shifted = _roll_rows(lane, k // 2)
+        hk = h_ref[k]
+        gk = g_ref[k]
+        a = a + hk * shifted
+        d = d + gk * shifted
+    a_ref[...] = a
+    d_ref[...] = d
+
+
+@functools.partial(
+    jax.jit, static_argnames=("taps", "block_b", "interpret")
+)
+def wpd_level(
+    x: jax.Array,
+    h: jax.Array,
+    g: jax.Array,
+    *,
+    taps: int,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """One analysis level for x (B, N) -> (approx, detail) each (B, N/2).
+
+    B is padded to a block multiple; N must be even (asserted).
+    """
+    b, n = x.shape
+    assert n % 2 == 0, "row length must be even"
+    x = x.astype(jnp.float32)
+    pad_b = (-b) % block_b
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0)))
+    bp = x.shape[0]
+
+    kern = functools.partial(_wpd_level_kernel, taps=taps)
+    a, d = pl.pallas_call(
+        kern,
+        grid=(bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((taps,), lambda i: (0,)),
+            pl.BlockSpec((taps,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, n // 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, n // 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, n // 2), jnp.float32),
+            jax.ShapeDtypeStruct((bp, n // 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, h.astype(jnp.float32), g.astype(jnp.float32))
+    return a[:b], d[:b]

@@ -1,0 +1,37 @@
+"""Jit'd public wrapper for the WPD analysis-level kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.wpd import kernel as _kernel
+from repro.kernels.wpd import ref as _ref
+from repro.signal import wavelet as _wavelet
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("wavelet", "block_b", "use_pallas")
+)
+def wpd_level(
+    x: jax.Array,
+    *,
+    wavelet: str = "db4",
+    block_b: int = 256,
+    use_pallas: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One analysis level of the named wavelet for x (B, N)."""
+    h, g = _wavelet.filters(wavelet)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return _ref.wpd_level(x, h, g)
+    return _kernel.wpd_level(
+        x, h, g, taps=int(h.shape[0]), block_b=block_b,
+        interpret=not _on_tpu(),
+    )

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the wpd kernel: the gather+matmul formulation
+from repro.signal.wavelet (the module-level reference implementation)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def wpd_level(x: jax.Array, h: jax.Array, g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """a[b, n] = sum_k h[k] x[b, (2n+k) % N]; same with g for d."""
+    x = x.astype(jnp.float32)
+    n = x.shape[-1]
+    taps = h.shape[0]
+    base = 2 * jnp.arange(n // 2, dtype=jnp.int32)[:, None]
+    offs = jnp.arange(taps, dtype=jnp.int32)[None, :]
+    idx = (base + offs) % n
+    xw = x[..., idx]  # (B, N/2, L)
+    return xw @ h.astype(jnp.float32), xw @ g.astype(jnp.float32)

@@ -1,0 +1,266 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, print memory/cost analyses, and derive the roofline
+terms (launch/hlo_analysis.py) from the compiled SPMD module.
+
+The two lines above MUST stay the first statements of this module: jax
+locks the device count at first init, and only the dry-run may see 512
+placeholder host devices (smoke tests / benches see 1).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k [--multi-pod] [--out results.jsonl] [--naive-attn]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_config, shape_applicable
+from repro.data.synthetic import batch_specs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models import build, for_shape
+from repro.optim import AdamWConfig, adamw, cosine_warmup
+from repro.serving import make_serve_step
+from repro.sharding import rules
+from repro.training import make_train_step, train_state_shapes
+
+
+def _with_shardings(shape_tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=jax.sharding.NamedSharding(mesh, p)),
+        shape_tree, spec_tree)
+
+
+def input_specs(arch: str, shape_name: str, mesh, *, kind=None,
+                strategy: str = "2d", align_heads: bool = True,
+                seq_shard: bool = False, context_parallel: bool = False,
+                moe_wg: bool = False, cfg_overrides: dict | None = None):
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+    allocation) for every input of the lowered step."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = for_shape(get_config(arch), shape_name)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    act_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    model = build(cfg, act_axes=act_axes, mesh=mesh,
+                  seq_shard=seq_shard, context_parallel=context_parallel,
+                  moe_wg=moe_wg)
+    kind = kind or shape.kind
+    batch = batch_specs(cfg, shape)
+    batch_sp = rules.batch_pspecs(cfg, mesh, batch, strategy)
+    batch_sds = _with_shardings(batch, batch_sp, mesh)
+
+    param_shapes = model.param_shapes()
+    param_sp = rules.param_pspecs(cfg, mesh, param_shapes, strategy,
+                                  align_heads=align_heads)
+    params_sds = _with_shardings(param_shapes, param_sp, mesh)
+
+    if kind == "train":
+        opt = adamw(AdamWConfig(), cosine_warmup(3e-4, 100, 10_000))
+        state = train_state_shapes(model, opt)
+        state = type(state)(params_sds,
+                            type(state.opt)(
+                                jax.ShapeDtypeStruct((), jnp.int32),
+                                _with_shardings(state.opt.m, param_sp, mesh),
+                                _with_shardings(state.opt.v, param_sp, mesh)))
+        return model, (state, batch_sds)
+    if kind == "prefill":
+        return model, (params_sds, batch_sds)
+    # decode
+    cache = model.cache_shapes(shape.global_batch, shape.seq_len)
+    cache_sp = rules.cache_pspecs(cfg, mesh, cache, shape.global_batch,
+                                  strategy)
+    cache_sds = _with_shardings(cache, cache_sp, mesh)
+    return model, (params_sds, cache_sds, batch_sds)
+
+
+def auto_microbatches(cfg, shape, mesh) -> int:
+    """Grad-accumulation depth targeting ~1-4 sequences per device per
+    micro-step by model size (activation memory ~ d_model * n_layers)."""
+    batch_shards = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            batch_shards *= mesh.shape[a]
+    per_dev = max(1, shape.global_batch // batch_shards)
+    target = 1 if cfg.d_model >= 7168 else (2 if cfg.d_model >= 3584 else 4)
+    if cfg.n_experts:
+        # MoE activations are ~k/cf x larger (per-token expert buffers)
+        target = max(1, target // 2)
+    return max(1, per_dev // target)
+
+
+def step_fn(model, shape_name: str, kind: str, *, chunked_attn=None,
+            microbatches: int | None = 4):
+    shape = INPUT_SHAPES[shape_name]
+    if kind == "train":
+        opt = adamw(AdamWConfig(), cosine_warmup(3e-4, 100, 10_000))
+        return make_train_step(model, opt, microbatches=microbatches), (0,)
+    if kind == "prefill":
+        def prefill(params, batch):
+            return model.prefill(params, batch, shape.seq_len,
+                                 chunked_attn=chunked_attn)
+        return prefill, ()
+    return make_serve_step(model), (1,)
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """Analytic MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), with
+    N_active for MoE."""
+    model = build(cfg)
+    n = model.param_count()
+    if cfg.n_experts:
+        expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+        n = n - expert + expert * cfg.experts_per_token / cfg.n_experts
+    tokens = shape.global_batch * (1 if kind == "decode" else shape.seq_len)
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            chunked_attn=None, microbatches: int | None = 4,
+            strategy: str = "2d", align_heads: bool = True,
+            seq_shard: bool = False, context_parallel: bool = False,
+            moe_wg: bool = False, cfg_overrides: dict | None = None,
+            verbose: bool = True) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = for_shape(get_config(arch), shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "strategy": strategy, "microbatches": microbatches,
+           "align_heads": align_heads, "seq_shard": seq_shard,
+           "context_parallel": context_parallel, "moe_wg": moe_wg,
+           "cfg_overrides": cfg_overrides}
+    if not ok:
+        rec["skipped"] = why
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {why}")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if not microbatches:  # 0/None -> auto
+        microbatches = auto_microbatches(cfg, shape, mesh)
+        rec["microbatches"] = microbatches
+    model, args = input_specs(arch, shape_name, mesh,
+                              strategy=strategy, align_heads=align_heads,
+                              seq_shard=seq_shard,
+                              context_parallel=context_parallel,
+                              moe_wg=moe_wg, cfg_overrides=cfg_overrides)
+    fn, donate = step_fn(model, shape_name, shape.kind,
+                         chunked_attn=chunked_attn,
+                         microbatches=microbatches)
+    with mesh:
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    cost = hlo_analysis.analyze(compiled.as_text())
+    terms = hlo_analysis.roofline_terms(
+        cost, peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW)
+    n_dev = mesh.size
+    mf = model_flops(cfg, shape, shape.kind)
+
+    rec.update(
+        compile_s=round(t1 - t0, 1),
+        n_devices=n_dev,
+        # memory_analysis is per device
+        arg_bytes=getattr(mem, "argument_size_in_bytes", None),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+        output_bytes=getattr(mem, "output_size_in_bytes", None),
+        fits_hbm=bool(
+            (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0) <= HBM_BYTES),
+        hlo_flops_per_dev=cost.flops,
+        hbm_bytes_per_dev=cost.hbm_bytes,
+        coll_bytes_per_dev=cost.coll_bytes,
+        coll_by_type={k: int(v) for k, v in cost.coll_by_type.items()},
+        xla_cost_analysis_flops=ca.get("flops"),
+        model_flops=mf,
+        useful_flops_ratio=(mf / (cost.flops * n_dev)
+                            if cost.flops else None),
+        **terms,
+    )
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} on {rec['mesh']} "
+              f"(compile {rec['compile_s']}s)")
+        print(f"  memory_analysis: args={rec['arg_bytes']} "
+              f"temp={rec['temp_bytes']} out={rec['output_bytes']} "
+              f"fits_hbm={rec['fits_hbm']}")
+        print(f"  cost_analysis: xla_flops={rec['xla_cost_analysis_flops']} "
+              f"(loop bodies once); trip-weighted flops/dev="
+              f"{cost.flops:.3e}")
+        print(f"  roofline: compute={terms['compute_s']:.4f}s "
+              f"memory={terms['memory_s']:.4f}s "
+              f"collective={terms['collective_s']:.4f}s "
+              f"-> {terms['bottleneck']}-bound")
+        print(f"  collectives: {rec['coll_by_type']}")
+        print(f"  MODEL_FLOPS={mf:.3e} useful-ratio="
+              f"{rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'], 3)}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--naive-attn", action="store_true",
+                    help="ablation: O(S^2)-score attention path")
+    ap.add_argument("--strategy", default="2d",
+                    choices=("2d", "fsdp", "dp"))
+    ap.add_argument("--no-align-heads", action="store_true",
+                    help="ablation: allow misaligned flattened-head TP")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-parallel residual stream")
+    ap.add_argument("--context-parallel", action="store_true",
+                    help="shard attention q-chunks over 'model'")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="grad-accumulation micro-steps for train shapes "
+                         "(0 = auto by model size)")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    chunked = False if args.naive_attn else None
+    pairs = ([(a, s) for a in ARCH_NAMES for s in INPUT_SHAPES]
+             if args.all else [(args.arch, args.shape)])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    records = []
+    for arch, shape_name in pairs:
+        for mp in meshes:
+            try:
+                rec = run_one(arch, shape_name, multi_pod=mp,
+                              chunked_attn=chunked,
+                              microbatches=args.microbatches,
+                              strategy=args.strategy)
+            except Exception as e:  # record and keep sweeping
+                rec = {"arch": arch, "shape": shape_name,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}"}
+                print(f"[dryrun] FAIL {arch} x {shape_name} "
+                      f"({rec['mesh']}): {rec['error'][:200]}")
+            records.append(rec)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    n_ok = sum(1 for r in records if "skipped" not in r and r.get("fits_hbm"))
+    print(f"[dryrun] done: {len(records)} records, {n_ok} compiled+fit")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing never touches jax
+device state.  Hardware model: TPU v5e pod = 16x16 = 256 chips;
+multi-pod = 2 pods = 512 chips with a leading "pod" axis.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} are "
+            "visible; the dry-run entrypoint must set "
+            'XLA_FLAGS="--xla_force_host_platform_device_count=512" before '
+            "any jax import (see launch/dryrun.py)")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the CPU devices that actually exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# Hardware constants for the roofline (TPU v5e; see brief).
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+HBM_BYTES = 16 * 1024**3        # v5e HBM capacity

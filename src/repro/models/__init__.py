@@ -1,0 +1,3 @@
+from repro.models.model import Model, build, for_shape
+
+__all__ = ["Model", "build", "for_shape"]

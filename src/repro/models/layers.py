@@ -1,0 +1,365 @@
+"""Shared transformer building blocks: RMSNorm, RoPE, GQA attention
+(full / sliding / prefix-LM / bidirectional; teacher-forced and cached
+decode), and the FFN variants used by the assigned archs.
+
+All functions are pure; parameters are dicts produced by the matching
+``*_specs`` function (see ``models.params``).  Compute runs in
+``cfg.dtype``; accumulation in f32 where it matters (softmax, norms).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import params as pr
+
+Params = dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(d: int) -> Params:
+    return {"scale": pr.norm_scale(d)}
+
+
+_RMS_EPS = 1e-6
+
+
+@jax.custom_vjp
+def _rmsnorm_core(x: jax.Array, scale: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + _RMS_EPS) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _rmsnorm_fwd(x, scale):
+    # Save x in ITS OWN dtype (bf16): without this, XLA hoists the f32
+    # convert of the backward into the remat-saved stack, doubling the
+    # per-layer residual memory (observed on the train_4k dry-runs).
+    return _rmsnorm_core(x, scale), (x, scale)
+
+
+def _rmsnorm_bwd(res, g):
+    x, scale = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32) * scale.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + _RMS_EPS)
+    dot = jnp.mean(gf * xf, axis=-1, keepdims=True)
+    dx = inv * (gf - xf * dot * inv * inv)
+    dscale = jnp.sum(
+        (g.astype(jnp.float32) * xf * inv).reshape(-1, x.shape[-1]), axis=0)
+    return dx.astype(x.dtype), dscale.astype(scale.dtype).reshape(scale.shape)
+
+
+_rmsnorm_core.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    del eps  # fixed _RMS_EPS (custom_vjp needs static closure)
+    return _rmsnorm_core(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ArchConfig) -> Params:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p: Params = {
+        "wq": pr.dense(d, h * hd),
+        "wk": pr.dense(d, k * hd),
+        "wv": pr.dense(d, k * hd),
+        "wo": pr.dense(h * hd, d),
+    }
+    if cfg.use_bias:
+        p |= {"bq": pr.bias(h * hd), "bk": pr.bias(k * hd),
+              "bv": pr.bias(k * hd), "bo": pr.bias(d)}
+    if cfg.qk_norm:
+        p |= {"q_norm": rmsnorm_specs(hd), "k_norm": rmsnorm_specs(hd)}
+    return p
+
+
+def _project_qkv(cfg: ArchConfig, p: Params, x: jax.Array, positions):
+    b, s, _ = x.shape
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+
+    def proj(w, bkey, n):
+        y = x @ p[w].astype(dt)
+        if cfg.use_bias:
+            y = y + p[bkey].astype(dt)
+        return y.reshape(b, s, n, hd)
+
+    q = proj("wq", "bq", h)
+    kk = proj("wk", "bk", k)
+    v = proj("wv", "bv", k)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        kk = rmsnorm(p["k_norm"], kk)
+    if not cfg.is_encoder:  # encoders here use absolute conv-pos (stubbed)
+        q = rope(q, positions, cfg.rope_theta)
+        kk = rope(kk, positions, cfg.rope_theta)
+    return q, kk, v
+
+
+def _use_flash_kernel(cfg: ArchConfig, s: int, prefix_len: int) -> bool:
+    """On TPU, plain causal/bidirectional full attention dispatches to the
+    Pallas flash kernel (kernels/flash_attention); sliding / prefix-LM
+    masks stay on the jnp paths."""
+    if jax.default_backend() != "tpu":
+        return False
+    if cfg.attention == "sliding" or prefix_len > 0:
+        return False
+    return s % 512 == 0 and cfg.head_dim % 128 == 0
+
+
+def _mask(cfg: ArchConfig, sq: int, skv: int, q_off, *, window: int | None,
+          prefix_len: int = 0) -> jax.Array:
+    """(sq, skv) additive mask in f32. q_off = absolute pos of query row 0."""
+    qi = q_off + jnp.arange(sq)[:, None]
+    kj = jnp.arange(skv)[None, :]
+    if cfg.is_encoder:
+        allowed = jnp.ones((sq, skv), bool)
+    else:
+        allowed = kj <= qi
+        if prefix_len > 0:  # prefix-LM: bidirectional over the prefix
+            allowed = allowed | (kj < prefix_len)
+        if window is not None:
+            allowed = allowed & (kj > qi - window)
+    return jnp.where(allowed, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, mask_bias):
+    """q: (B,Sq,H,hd), k/v: (B,Skv,K,hd); GQA grouped; f32 softmax."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(hd) + mask_bias  # broadcast (Sq,Skv)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_chunked(q, k, v, cfg: ArchConfig, *, window, prefix_len,
+                  q_chunk: int | None = None, cp=None):
+    """Flash-style online-softmax over query chunks (beyond-paper perf
+    variant: O(S*chunk) live logits instead of O(S^2)).  Mirrors
+    ``kernels/flash_attention``; used when ``cfg.remat`` prefill would
+    otherwise materialize the S^2 score tensor.
+
+    ``cp = (constrain_fn, size)`` enables CONTEXT PARALLELISM: the chunk
+    axis is folded to (size, n_chunks/size) with the outer axis sharded
+    over the mesh 'model' axis -- the §Perf answer for archs whose head
+    count does not divide the tp axis (e.g. deepseek's 56 heads on 16):
+    attention compute shards by QUERY RANGE instead of by head."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    if q_chunk is None:
+        # cap live scores at q_chunk * s <= 4M elems per (batch, head)
+        q_chunk = max(128, min(1024, (1 << 22) // s))
+    n_chunks = s // q_chunk
+    qg = q.reshape(b, n_chunks, q_chunk, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    @jax.checkpoint  # flash-style: recompute scores in bwd, never store S^2
+    def one_chunk(ci, qc):
+        bias = _mask(cfg, q_chunk, s, ci * q_chunk, window=window,
+                     prefix_len=prefix_len)
+        logits = jnp.einsum("bqkgh,bskh->bkgqs", qc, k).astype(jnp.float32)
+        logits = logits / jnp.sqrt(hd) + bias
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+
+    cp_fn, cp_size = cp if cp else (None, 1)
+    if cp_size > 1 and n_chunks % cp_size == 0:
+        nl = n_chunks // cp_size
+        idx = jnp.arange(n_chunks).reshape(cp_size, nl)
+        qg2 = qg.reshape(cp_size, nl, *qg.shape[1:])
+        qg2 = cp_fn(qg2)  # shard outer chunk axis over 'model'
+        out = jax.vmap(lambda irow, qrow: jax.lax.map(
+            lambda a: one_chunk(*a), (irow, qrow)))(idx, qg2)
+        out = cp_fn(out)
+        out = out.reshape(n_chunks, *out.shape[2:])
+    else:
+        out = jax.lax.map(lambda args: one_chunk(*args),
+                          (jnp.arange(n_chunks), qg))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+    return out
+
+
+def attn_apply(cfg: ArchConfig, p: Params, x: jax.Array, *,
+               prefix_len: int = 0, chunked: bool = False,
+               return_kv: bool = False, cp=None):
+    """Teacher-forced full-sequence attention (train / prefill)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    window = cfg.window if cfg.attention == "sliding" else None
+    if _use_flash_kernel(cfg, s, prefix_len):
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(q, k, v, causal=not cfg.is_encoder)
+    elif chunked and s % 1024 == 0 and s > 1024:
+        out = _sdpa_chunked(q, k, v, cfg, window=window, prefix_len=prefix_len,
+                            cp=cp)
+    else:
+        bias = _mask(cfg, s, s, 0, window=window, prefix_len=prefix_len)
+        out = _sdpa(q, k, v, bias)
+    y = out.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(x.dtype)
+    if cfg.use_bias:
+        y = y + p["bo"].astype(x.dtype)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# --- cached decode ----------------------------------------------------------
+
+def attn_cache_shape(cfg: ArchConfig, batch: int, max_seq: int):
+    """KV cache (k, v): (B, S_cache, K, hd).  Sliding attention keeps a ring
+    buffer of ``window`` entries -- the sub-quadratic long_500k variant."""
+    s_cache = min(max_seq, cfg.window) if cfg.attention == "sliding" else max_seq
+    kv = (batch, s_cache, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": kv, "v": kv}
+
+
+def attn_decode(cfg: ArchConfig, p: Params, x: jax.Array, cache: Params,
+                pos: jax.Array) -> tuple[jax.Array, Params]:
+    """One-token decode.  x: (B, 1, d); pos: int32 absolute position --
+    scalar (lockstep batch) or (B,) PER-SLOT (continuous batching).
+    Returns (y (B,1,d), updated {k,v})."""
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))   # (B,)
+    positions = pos[:, None]                                    # (B, 1)
+    q, k1, v1 = _project_qkv(cfg, p, x, positions)
+    s_cache = cache["k"].shape[1]
+    slot = pos % s_cache if cfg.attention == "sliding" else pos
+
+    def row_update(c, u, s):  # (S,K,hd), (1,K,hd), scalar
+        return jax.lax.dynamic_update_slice(c, u, (s, 0, 0))
+
+    k = jax.vmap(row_update)(cache["k"], k1.astype(cache["k"].dtype), slot)
+    v = jax.vmap(row_update)(cache["v"], v1.astype(cache["v"].dtype), slot)
+
+    idx = jnp.arange(s_cache)[None, :]                          # (1, S)
+    if cfg.attention == "sliding":
+        # Ring buffer: slot i last written at absolute position pos - age,
+        # age = (slot - i) mod W; valid iff that position exists (age<=pos).
+        age = (slot[:, None] - idx) % s_cache
+        valid = age <= pos[:, None]
+    else:
+        valid = idx <= pos[:, None]                             # (B, S)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    bias = bias[:, None, None, None, :]      # (B,1,1,1,S) over (b,k,g,q,s)
+    out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype), bias)
+    y = out.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(x.dtype)
+    if cfg.use_bias:
+        y = y + p["bo"].astype(x.dtype)
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+
+def ffn_specs(cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        p = {"wi_gate": pr.dense(d, f), "wi_up": pr.dense(d, f),
+             "wo": pr.dense(f, d)}
+    else:  # gelu
+        p = {"wi": pr.dense(d, f), "wo": pr.dense(f, d)}
+    if cfg.use_bias:
+        p |= {"bi": pr.bias(f), "bo": pr.bias(d)}
+    return p
+
+
+def ffn_apply(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.ffn_act == "swiglu" else jax.nn.gelu
+        g = x @ p["wi_gate"].astype(dt)
+        u = x @ p["wi_up"].astype(dt)
+        if cfg.use_bias:
+            g = g + p["bi"].astype(dt)
+        h = act(g) * u
+    else:
+        h = x @ p["wi"].astype(dt)
+        if cfg.use_bias:
+            h = h + p["bi"].astype(dt)
+        h = jax.nn.gelu(h)
+    y = h @ p["wo"].astype(dt)
+    if cfg.use_bias:
+        y = y + p["bo"].astype(dt)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Standard pre-norm transformer block (attention + ffn)
+# ---------------------------------------------------------------------------
+
+def block_specs(cfg: ArchConfig) -> Params:
+    return {
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "attn": attn_specs(cfg),
+        "ln2": rmsnorm_specs(cfg.d_model),
+        "ffn": ffn_specs(cfg),
+    }
+
+
+def block_apply(cfg: ArchConfig, p: Params, x: jax.Array, *,
+                prefix_len: int = 0, chunked: bool = False,
+                return_kv: bool = False, cp=None):
+    a = attn_apply(cfg, p["attn"], rmsnorm(p["ln1"], x),
+                   prefix_len=prefix_len, chunked=chunked,
+                   return_kv=return_kv, cp=cp)
+    if return_kv:
+        a, kv = a
+    x = x + a
+    x = x + ffn_apply(cfg, p["ffn"], rmsnorm(p["ln2"], x))
+    if return_kv:
+        return x, kv
+    return x
+
+
+def block_decode(cfg: ArchConfig, p: Params, x: jax.Array, cache: Params,
+                 pos: jax.Array) -> tuple[jax.Array, Params]:
+    a, new_cache = attn_decode(cfg, p["attn"], rmsnorm(p["ln1"], x), cache, pos)
+    x = x + a
+    x = x + ffn_apply(cfg, p["ffn"], rmsnorm(p["ln2"], x))
+    return x, new_cache

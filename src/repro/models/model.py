@@ -1,0 +1,553 @@
+"""Unified model assembly for the zoo.
+
+``build(cfg)`` returns a ``Model`` whose methods are pure functions:
+
+  * ``param_specs()`` / ``init(rng)`` / ``param_shapes()``
+  * ``forward(params, batch)``            -> (logits (B,S,V), aux)  (train)
+  * ``prefill(params, batch, max_seq)``   -> (last_logits, cache)
+  * ``decode_step(params, cache, batch)`` -> (logits (B,1,V), cache)
+  * ``loss(params, batch)``               -> (scalar, metrics)
+  * ``cache_shapes(batch, max_seq)``      -> pytree of ShapeDtypeStruct
+
+Layer stacks are ``lax.scan`` over stacked parameter pytrees (compact HLO,
+remat per block).  Heterogeneous families:
+
+  * hybrid (zamba2): scan groups of [shared-attn site + ``attn_every``
+    mamba blocks] + a remainder group; attention params are SHARED (one
+    copy), each site has its own KV cache.
+  * ssm (xlstm): super-blocks of [(period-1) mLSTM + 1 sLSTM], scan over
+    supers, inner scan over the mLSTMs.
+
+Attention defaults to the chunked online-softmax path for long sequences
+(exact; mirrors kernels/flash_attention) -- the naive O(S^2)-score path is
+kept for ablation via ``chunked=False``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as ly
+from repro.models import moe as moe_mod
+from repro.models import params as pr
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xl
+
+Params = dict[str, Any]
+
+
+def _stack_specs(specs: Params, n: int) -> Params:
+    """Give every ParamSpec a leading stack axis of n."""
+    return jax.tree.map(
+        lambda s: pr.ParamSpec((n,) + s.shape, s.init, s.scale),
+        specs, is_leaf=pr.is_spec,
+    )
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _auto_chunked(chunked: bool | None, s: int) -> bool:
+    if chunked is None:
+        return s > 2048 and s % 1024 == 0
+    return chunked
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    # mesh axes carrying the global batch (e.g. ("data",) or ("pod","data"))
+    # plus the concrete mesh.  When set, activation sharding is re-seeded
+    # after the embedding gather (the vocab-sharded table otherwise leaves
+    # activations replicated and GSPMD silently recomputes the whole batch
+    # on every device).
+    act_axes: tuple | None = None
+    act_mesh: Any = None
+    # Sequence-parallel residual stream (§Perf): shard activations' S dim
+    # over 'model' between blocks, turning per-layer TP all-reduces into
+    # reduce-scatters (GSPMD picks the RS+AG decomposition).
+    seq_shard: bool = False
+    # Context-parallel attention (§Perf): shard the chunked-attention
+    # q-chunk axis over 'model'.  The fix for head counts that do not
+    # divide tp (deepseek 56H, starcoder 36H on a 16-way model axis).
+    context_parallel: bool = False
+    # Hand-VJP expert FFN with sharding-constrained weight grads (§Perf).
+    moe_wg: bool = False
+
+    def _constrain(self, x: jax.Array) -> jax.Array:
+        if self.act_axes is None or self.act_mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        b = x.shape[0]
+        total = 1
+        for ax in self.act_axes:
+            total *= self.act_mesh.shape[ax]
+        if b % total:
+            return x
+        spec = P(self.act_axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.act_mesh, spec))
+
+    def _cp(self):
+        if not self.context_parallel or self.act_mesh is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        tp = dict(self.act_mesh.shape).get("model", 1)
+        if tp <= 1:
+            return None
+
+        def fn(t):
+            total = 1
+            for ax in (self.act_axes or ()):
+                total *= self.act_mesh.shape[ax]
+            b_ax = self.act_axes if total and t.shape[2] % total == 0 \
+                else None
+            spec = P("model", None, b_ax, *([None] * (t.ndim - 3)))
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(self.act_mesh, spec))
+
+        return (fn, tp)
+
+    def _buf_constrain(self):
+        if self.act_mesh is None or self.act_axes is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def fn(t):
+            # t: (B, E, C, d) dispatch/result buffers
+            total = 1
+            for ax in self.act_axes:
+                total *= self.act_mesh.shape[ax]
+            b_ax = self.act_axes if t.shape[0] % total == 0 else None
+            e_ax = "model" if t.shape[1] % self.act_mesh.shape["model"] == 0 \
+                else None
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(self.act_mesh, P(b_ax, e_ax, None, None)))
+
+        return fn
+
+    def _wg_constrain(self):
+        if not self.moe_wg or self.act_mesh is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def fn(g):
+            # g: (E, r, c) weight grad; E -> model, r -> data (the expert
+            # parameter/optimizer layout), guarded by divisibility.
+            e_ax = "model" if g.shape[0] % self.act_mesh.shape["model"] == 0 \
+                else None
+            r_ax = "data" if g.shape[1] % self.act_mesh.shape["data"] == 0 \
+                else None
+            return jax.lax.with_sharding_constraint(
+                g, NamedSharding(self.act_mesh, P(e_ax, r_ax, None)))
+
+        return fn
+
+    def _constrain_seq(self, x: jax.Array) -> jax.Array:
+        """(B, S, d) -> S sharded over 'model' (sequence parallelism)."""
+        if (not self.seq_shard or self.act_axes is None
+                or self.act_mesh is None or x.ndim != 3):
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        tp = self.act_mesh.shape.get("model", 1)
+        b_ok = True
+        total = 1
+        for ax in self.act_axes:
+            total *= self.act_mesh.shape[ax]
+        if x.shape[0] % total or x.shape[1] % tp:
+            return x
+        spec = P(self.act_axes, "model", None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.act_mesh, spec))
+
+    # --- parameters ---------------------------------------------------------
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        p: Params = {"final_ln": ly.rmsnorm_specs(cfg.d_model),
+                     "unembed": pr.dense(cfg.d_model, cfg.vocab_size)}
+        if cfg.modality == "audio":
+            p["frontend_proj"] = pr.dense(cfg.frontend_dim, cfg.d_model)
+        else:
+            p["embed"] = pr.embed(cfg.vocab_size, cfg.d_model)
+
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            block = ly.block_specs(cfg)
+            if cfg.family == "moe":
+                del block["ffn"]
+                block["moe"] = moe_mod.moe_specs(cfg)
+            p["blocks"] = _stack_specs(block, cfg.n_layers)
+        elif cfg.family == "hybrid":
+            n_full, rem, per = self._hybrid_shape()
+            mamba = ssm_mod.mamba2_specs(cfg)
+            p["mamba_groups"] = _stack_specs(_stack_specs(mamba, per), n_full)
+            if rem:
+                p["mamba_rest"] = _stack_specs(mamba, rem)
+            p["shared_attn"] = ly.block_specs(cfg)
+        elif cfg.family == "ssm":  # xlstm
+            n_super, per = self._xlstm_shape()
+            p["supers"] = _stack_specs(
+                {"mlstm": _stack_specs(xl.mlstm_specs(cfg), per - 1),
+                 "slstm": xl.slstm_specs(cfg)},
+                n_super)
+        else:
+            raise ValueError(cfg.family)
+        return p
+
+    def init(self, rng: jax.Array) -> Params:
+        return pr.init_params(self.param_specs(), rng)
+
+    def param_shapes(self) -> Params:
+        return pr.shape_tree(self.param_specs())
+
+    def param_count(self) -> int:
+        return pr.param_count(self.param_specs())
+
+    # --- topology helpers ----------------------------------------------------
+    def _hybrid_shape(self):
+        per = self.cfg.attn_every
+        n_full = self.cfg.n_layers // per
+        rem = self.cfg.n_layers - n_full * per
+        return n_full, rem, per
+
+    def _xlstm_shape(self):
+        per = self.cfg.slstm_period
+        assert self.cfg.n_layers % per == 0
+        return self.cfg.n_layers // per, per
+
+    @property
+    def n_attn_sites(self) -> int:
+        n_full, rem, _ = self._hybrid_shape()
+        return n_full + (1 if rem else 0)
+
+    # --- embedding -----------------------------------------------------------
+    def _embed_in(self, params: Params, batch: Params) -> jax.Array:
+        cfg = self.cfg
+        dt = ly.cdtype(cfg)
+        if cfg.modality == "audio":
+            return self._constrain(batch["frames"].astype(dt)
+                                   @ params["frontend_proj"].astype(dt))
+        tok = self._constrain(params["embed"].astype(dt)[batch["tokens"]])
+        if cfg.modality == "vlm":
+            patches = batch["patches"].astype(dt)
+            return self._constrain(jnp.concatenate([patches, tok], axis=1))
+        return tok
+
+    def _unembed(self, params: Params, x: jax.Array) -> jax.Array:
+        x = ly.rmsnorm(params["final_ln"], x)
+        return (x @ params["unembed"].astype(x.dtype)).astype(jnp.float32)
+
+    # --- backbone: one code path for train forward AND prefill ----------------
+    def _backbone(self, params: Params, x: jax.Array, *,
+                  chunked: bool, collect: bool):
+        """x: (B,S,d) embedded input.  Returns (x, aux, raw_cache|None).
+        raw_cache holds per-layer K/V stacks (attention) / final states
+        (recurrent) straight off the scan -- `prefill` reshapes them."""
+        cfg = self.cfg
+        prefix = cfg.n_patches if cfg.prefix_lm else 0
+        aux = jnp.zeros((), jnp.float32)
+
+        cp = self._cp()
+        if cfg.family in ("dense", "audio", "vlm"):
+            def body(h, bp):
+                h, kv = ly.block_apply(cfg, bp, h, prefix_len=prefix,
+                                       chunked=chunked, return_kv=True,
+                                       cp=cp)
+                h = self._constrain_seq(h)
+                return h, (kv if collect else None)
+            x, kvs = jax.lax.scan(_maybe_remat(body, cfg), x,
+                                  params["blocks"])
+            return x, aux, kvs
+
+        if cfg.family == "moe":
+            def body(carry, bp):
+                h, aux_sum = carry
+                a, kv = ly.attn_apply(cfg, bp["attn"],
+                                      ly.rmsnorm(bp["ln1"], h),
+                                      chunked=chunked, return_kv=True,
+                                      cp=cp)
+                h = h + a
+                y, aux1 = moe_mod.moe_apply(cfg, bp["moe"],
+                                            ly.rmsnorm(bp["ln2"], h),
+                                            wg_constrain=self._wg_constrain(),
+                                            buf_constrain=self._buf_constrain())
+                return (self._constrain_seq(h + y), aux_sum + aux1), \
+                    (kv if collect else None)
+            (x, aux), kvs = jax.lax.scan(
+                _maybe_remat(body, cfg), (x, aux), params["blocks"])
+            return x, aux / cfg.n_layers, kvs
+
+        if cfg.family == "hybrid":
+            n_full, rem, per = self._hybrid_shape()
+            shared = params["shared_attn"]
+
+            def group(h, gp):
+                h, kv = ly.block_apply(cfg, shared, h, chunked=chunked,
+                                       return_kv=True, cp=cp)
+
+                def inner(c, mp):
+                    c, mc = ssm_mod.mamba2_apply(cfg, mp, c,
+                                                 return_cache=True)
+                    return c, (mc if collect else None)
+                h, mcs = jax.lax.scan(inner, h, gp)
+                return h, ((kv, mcs) if collect else None)
+            x, full_c = jax.lax.scan(_maybe_remat(group, cfg), x,
+                                     params["mamba_groups"])
+            rest_c = None
+            if rem:
+                x, kv_last = ly.block_apply(cfg, shared, x, chunked=chunked,
+                                            return_kv=True)
+
+                def inner(c, mp):
+                    c, mc = ssm_mod.mamba2_apply(cfg, mp, c,
+                                                 return_cache=True)
+                    return c, (mc if collect else None)
+                x, mcs_last = jax.lax.scan(inner, x, params["mamba_rest"])
+                rest_c = (kv_last, mcs_last) if collect else None
+            return x, aux, (full_c, rest_c)
+
+        if cfg.family == "ssm":
+            def super_body(h, sp):
+                def inner(c, mp):
+                    c, mc = xl.mlstm_apply(cfg, mp, c, return_cache=True)
+                    return c, (mc if collect else None)
+                h, mls = jax.lax.scan(inner, h, sp["mlstm"])
+                h, sl = xl.slstm_apply(cfg, sp["slstm"], h, return_cache=True)
+                return h, ({"mlstm": mls, "slstm": sl} if collect else None)
+            x, sc = jax.lax.scan(_maybe_remat(super_body, cfg), x,
+                                 params["supers"])
+            return x, aux, sc
+
+        raise ValueError(cfg.family)
+
+    # --- train/eval forward ----------------------------------------------------
+    def forward(self, params: Params, batch: Params, *,
+                chunked_attn: bool | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+        """Returns (logits (B,S,V) f32, aux loss scalar)."""
+        x = self._embed_in(params, batch)
+        chunked = _auto_chunked(chunked_attn, x.shape[1])
+        x, aux, _ = self._backbone(params, x, chunked=chunked, collect=False)
+        return self._unembed(params, x), aux
+
+    def loss(self, params: Params, batch: Params) -> tuple[jax.Array, Params]:
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        targets = batch["targets"]
+        if cfg.modality == "vlm":  # loss only over the text positions
+            logits = logits[:, cfg.n_patches:, :]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        mask = batch.get("mask")
+        if mask is not None:
+            denom = jnp.maximum(jnp.sum(mask), 1.0)
+            ce = jnp.sum(nll * mask) / denom
+        else:
+            ce = jnp.mean(nll)
+        total = ce + cfg.router_aux_weight * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # --- caches -----------------------------------------------------------------
+    def cache_shapes(self, batch: int, max_seq: int) -> Params:
+        cfg = self.cfg
+        dt = ly.cdtype(cfg)
+
+        def sd(shape, dtype=dt):
+            return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+        def stack(tree, *ns):
+            for n in reversed(ns):
+                tree = jax.tree.map(
+                    lambda s: sd((n,) + s.shape, s.dtype), tree)
+            return tree
+
+        pos = sd((batch,), jnp.int32)  # PER-SLOT positions (continuous batching)
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            kv = {k: sd(v) for k, v in
+                  ly.attn_cache_shape(cfg, batch, max_seq).items()}
+            return {"layers": stack(kv, cfg.n_layers), "pos": pos}
+        if cfg.family == "hybrid":
+            n_full, rem, per = self._hybrid_shape()
+            ms = ssm_mod.mamba2_cache_shape(cfg, batch)
+            m = {"conv": sd(ms["conv"]), "state": sd(ms["state"], jnp.float32)}
+            kv = {k: sd(v) for k, v in
+                  ly.attn_cache_shape(cfg, batch, max_seq).items()}
+            out = {"mamba": stack(m, n_full, per),
+                   "attn": stack(kv, self.n_attn_sites), "pos": pos}
+            if rem:
+                out["mamba_rest"] = stack(m, rem)
+            return out
+        if cfg.family == "ssm":
+            n_super, per = self._xlstm_shape()
+            mls = xl.mlstm_cache_shape(cfg, batch)
+            ml = {"conv": sd(mls["conv"]),
+                  "state": sd(mls["state"], jnp.float32)}
+            sl = {k: sd(v, jnp.float32)
+                  for k, v in xl.slstm_cache_shape(cfg, batch).items()}
+            return {"supers": {"mlstm": stack(ml, n_super, per - 1),
+                               "slstm": stack(sl, n_super)},
+                    "pos": pos}
+        raise ValueError(cfg.family)
+
+    def init_cache(self, batch: int, max_seq: int) -> Params:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shapes(batch, max_seq))
+
+    # --- prefill: ONE pass producing last-token logits AND the decode cache ----
+    def prefill(self, params: Params, batch: Params, max_seq: int, *,
+                chunked_attn: bool | None = None
+                ) -> tuple[jax.Array, Params]:
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        b, s, _ = x.shape
+        chunked = _auto_chunked(chunked_attn, s)
+        x, _, raw = self._backbone(params, x, chunked=chunked, collect=True)
+        logits = self._unembed(params, x[:, -1:, :])
+        pos = jnp.full((b,), s, jnp.int32)
+        dt = ly.cdtype(cfg)
+
+        def to_kv_cache(ks, vs, s_cache):
+            """(L?, B, S, K, hd) full-seq K/V -> fixed cache of s_cache."""
+            if s_cache >= s:
+                pad = [(0, 0)] * ks.ndim
+                pad[-3] = (0, s_cache - s)
+                return (jnp.pad(ks, pad).astype(dt),
+                        jnp.pad(vs, pad).astype(dt))
+            # sliding ring buffer: last s_cache positions, rolled so that
+            # absolute position p sits in slot p % s_cache
+            tail_k = ks[..., s - s_cache:, :, :]
+            tail_v = vs[..., s - s_cache:, :, :]
+            shift = s % s_cache  # position s - s_cache sits at slot shift
+            tail_k = jnp.roll(tail_k, shift, axis=-3)
+            tail_v = jnp.roll(tail_v, shift, axis=-3)
+            return tail_k.astype(dt), tail_v.astype(dt)
+
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            ks, vs = raw
+            s_cache = ly.attn_cache_shape(cfg, b, max_seq)["k"][1]
+            k_c, v_c = to_kv_cache(ks, vs, s_cache)
+            return logits, {"layers": {"k": k_c, "v": v_c}, "pos": pos}
+
+        if cfg.family == "hybrid":
+            (kv_full, mcs), rest = raw
+            n_full, rem, per = self._hybrid_shape()
+            s_cache = ly.attn_cache_shape(cfg, b, max_seq)["k"][1]
+            k_c, v_c = to_kv_cache(kv_full[0], kv_full[1], s_cache)
+            mamba_c = jax.tree.map(
+                lambda t: t if t.dtype == jnp.float32 else t.astype(dt), mcs)
+            out = {"mamba": mamba_c, "pos": pos}
+            if rem:
+                kv_last, mcs_last = rest
+                kl, vl = to_kv_cache(kv_last[0][None], kv_last[1][None],
+                                     s_cache)
+                k_c = jnp.concatenate([k_c, kl], axis=0)
+                v_c = jnp.concatenate([v_c, vl], axis=0)
+                out["mamba_rest"] = jax.tree.map(
+                    lambda t: t if t.dtype == jnp.float32 else t.astype(dt),
+                    mcs_last)
+            out["attn"] = {"k": k_c, "v": v_c}
+            return logits, out
+
+        if cfg.family == "ssm":
+            return logits, {"supers": raw, "pos": pos}
+        raise ValueError(cfg.family)
+
+    # --- single-token decode -------------------------------------------------
+    def decode_step(self, params: Params, cache: Params, batch: Params
+                    ) -> tuple[jax.Array, Params]:
+        cfg = self.cfg
+        dt = ly.cdtype(cfg)
+        if cfg.is_encoder:
+            raise ValueError("encoder-only arch has no decode step")
+        x = self._constrain(params["embed"].astype(dt)[batch["tokens"]])
+        pos = cache["pos"]
+
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            def body(carry, xs):
+                bp, kv = xs
+                if cfg.family == "moe":
+                    h = carry
+                    a, kv2 = ly.attn_decode(cfg, bp["attn"],
+                                            ly.rmsnorm(bp["ln1"], h), kv, pos)
+                    h = h + a
+                    y, _ = moe_mod.moe_apply(cfg, bp["moe"],
+                                             ly.rmsnorm(bp["ln2"], h))
+                    return h + y, kv2
+                h, kv2 = ly.block_decode(cfg, bp, carry, kv, pos)
+                return h, kv2
+            x, new_layers = jax.lax.scan(
+                body, x, (params["blocks"], cache["layers"]))
+            new_cache = {"layers": new_layers, "pos": pos + 1}
+
+        elif cfg.family == "hybrid":
+            n_full, rem, per = self._hybrid_shape()
+            shared = params["shared_attn"]
+
+            def group(carry, xs):
+                gp, mcache, kv = xs
+                h, kv2 = ly.block_decode(cfg, shared, carry, kv, pos)
+
+                def inner(c, xs2):
+                    mp, mc = xs2
+                    return ssm_mod.mamba2_decode(cfg, mp, c, mc)
+                h, mcache2 = jax.lax.scan(inner, h, (gp, mcache))
+                return h, (mcache2, kv2)
+            attn_cache = cache["attn"]
+            kv_full = jax.tree.map(lambda t: t[:n_full], attn_cache)
+            x, (mamba2_c, kv2_full) = jax.lax.scan(
+                group, x, (params["mamba_groups"], cache["mamba"], kv_full))
+            new_cache = {"mamba": mamba2_c, "pos": pos + 1}
+            if rem:
+                kv_last = jax.tree.map(lambda t: t[n_full], attn_cache)
+                x, kv2_last = ly.block_decode(cfg, shared, x, kv_last, pos)
+
+                def inner(c, xs2):
+                    mp, mc = xs2
+                    return ssm_mod.mamba2_decode(cfg, mp, c, mc)
+                x, rest_c = jax.lax.scan(
+                    inner, x, (params["mamba_rest"], cache["mamba_rest"]))
+                new_cache["mamba_rest"] = rest_c
+                new_cache["attn"] = jax.tree.map(
+                    lambda f, l: jnp.concatenate([f, l[None]], axis=0),
+                    kv2_full, kv2_last)
+            else:
+                new_cache["attn"] = kv2_full
+
+        elif cfg.family == "ssm":
+            def super_body(carry, xs):
+                sp, sc = xs
+
+                def inner(c, xs2):
+                    mp, mc = xs2
+                    return xl.mlstm_decode(cfg, mp, c, mc)
+                h, ml2 = jax.lax.scan(inner, carry, (sp["mlstm"], sc["mlstm"]))
+                h, sl2 = xl.slstm_decode(cfg, sp["slstm"], h, sc["slstm"])
+                return h, {"mlstm": ml2, "slstm": sl2}
+            x, supers2 = jax.lax.scan(
+                super_body, x, (params["supers"], cache["supers"]))
+            new_cache = {"supers": supers2, "pos": pos + 1}
+        else:
+            raise ValueError(cfg.family)
+
+        return self._unembed(params, x), new_cache
+
+
+def build(cfg: ArchConfig, act_axes: tuple | None = None,
+          mesh: Any = None, seq_shard: bool = False,
+          context_parallel: bool = False, moe_wg: bool = False) -> Model:
+    return Model(cfg, act_axes, mesh, seq_shard, context_parallel, moe_wg)
+
+
+def for_shape(cfg: ArchConfig, shape_name: str) -> ArchConfig:
+    """Brief rule: long_500k needs sub-quadratic attention.  SSM/hybrid run
+    natively; dense/moe/vlm switch to the sliding-window VARIANT (recorded
+    as such in DESIGN.md/EXPERIMENTS.md -- not the published config)."""
+    if (shape_name == "long_500k" and cfg.attention == "full"
+            and cfg.family in ("dense", "moe", "vlm")):
+        return dataclasses.replace(cfg, attention="sliding")
+    return cfg

@@ -1,0 +1,83 @@
+"""Parameter spec trees.
+
+Models declare their parameters once as a pytree of ``ParamSpec`` and get
+three things from it:
+
+  * ``init_params(specs, rng)``   -- materialized f32 params (smoke tests);
+  * ``shape_tree(specs)``         -- ShapeDtypeStructs (dry-run lowering,
+                                     never allocates);
+  * a stable dict structure the sharding rules match on by path name.
+
+All parameters are stored float32 (master copy); compute casts per
+``ArchConfig.dtype``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple[int, ...]
+    init: str = "normal"        # normal | zeros | ones | small
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+
+
+def dense(d_in: int, d_out: int, *stack: int) -> ParamSpec:
+    return ParamSpec(tuple(stack) + (d_in, d_out), "normal", None)
+
+
+def bias(d: int, *stack: int) -> ParamSpec:
+    return ParamSpec(tuple(stack) + (d,), "zeros")
+
+
+def norm_scale(d: int, *stack: int) -> ParamSpec:
+    return ParamSpec(tuple(stack) + (d,), "ones")
+
+
+def embed(v: int, d: int) -> ParamSpec:
+    return ParamSpec((v, d), "normal", 1.0)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in(spec: ParamSpec) -> int:
+    return spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+
+
+def init_params(specs, rng: jax.Array):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+
+    def one(spec: ParamSpec, key):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, jnp.float32)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, jnp.float32)
+        scale = spec.scale
+        if scale is None:
+            scale = 1.0 / np.sqrt(max(_fan_in(spec), 1))
+        if spec.init == "small":
+            scale = 0.02
+        return scale * jax.random.normal(key, spec.shape, jnp.float32)
+
+    return treedef.unflatten([one(s, k) for s, k in zip(leaves, keys)])
+
+
+def shape_tree(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))

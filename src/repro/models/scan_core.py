@@ -1,0 +1,112 @@
+"""Chunkwise linear-attention / state-space core.
+
+Both Mamba2's SSD (arXiv:2405.21060 form) and xLSTM's mLSTM are instances
+of the gated linear recurrence
+
+    h_t = exp(ld_t) * h_{t-1} + k_t v_t^T          h: (Dk, Dv) per head
+    y_t = q_t . h_t
+
+computed here in the TPU-native chunked form: quadratic *within* a VMEM-
+sized chunk (MXU matmuls), a tiny sequential ``lax.scan`` *across* chunks.
+This is the sub-quadratic path that makes long_500k viable for the
+SSM/hybrid archs, and the sharding unit for sequence parallelism.
+
+Conventions: ``cum`` is the inclusive within-chunk cumsum of ``ld``; the
+decay between positions j <= i (same chunk) is ``exp(cum_i - cum_j)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_linear_attention(
+    q: jax.Array,       # (B, S, H, Dk)
+    k: jax.Array,       # (B, S, H, Dk)
+    v: jax.Array,       # (B, S, H, Dv)
+    log_decay: jax.Array,  # (B, S, H) -- ld_t <= 0
+    *,
+    chunk: int = 256,
+    initial_state: jax.Array | None = None,  # (B, H, Dk, Dv)
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,Dv), final_state (B,H,Dk,Dv))."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if s % chunk:
+        # Pad to a chunk multiple: k=v=0 contributes nothing to states,
+        # ld=0 (decay 1) leaves the recurrence untouched; padded y rows
+        # are sliced off below.
+        pad = chunk - s % chunk
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        y, state = chunked_linear_attention(
+            zf(q), zf(k), zf(v), zf(log_decay), chunk=chunk,
+            initial_state=initial_state)
+        return y[:, :s], state
+    nc = s // chunk
+    dt = q.dtype
+
+    def split(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    qc, kc, vc = split(q), split(k), split(v)
+    ld = split(log_decay).astype(jnp.float32)          # (B,nc,L,H)
+    cum = jnp.cumsum(ld, axis=2)                        # inclusive
+    total = cum[:, :, -1, :]                            # (B,nc,H)
+
+    # ---- intra-chunk (quadratic in `chunk`, MXU-friendly) -------------------
+    # decay(i,j) = exp(cum_i - cum_j) for j <= i, else 0
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,L,L,H)
+    li = jnp.arange(chunk)
+    causal = (li[:, None] >= li[None, :])[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(causal, rel, NEG_INF)).astype(dt)
+    scores = jnp.einsum("bclhd,bcmhd->bclmh", qc, kc) * decay
+    y_intra = jnp.einsum("bclmh,bcmhv->bclhv", scores, vc)
+
+    # ---- chunk summaries ----------------------------------------------------
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum).astype(dt)  # (B,nc,L,H)
+    state_c = jnp.einsum(
+        "bclhd,bclhv->bchdv", kc * decay_to_end[..., None], vc
+    )                                                    # (B,nc,H,Dk,Dv)
+
+    # ---- inter-chunk recurrence (sequential over nc only) -------------------
+    h0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, dk, dv), jnp.float32)
+    )
+
+    def step(hst, xs):
+        s_c, tot_c = xs                                  # (B,H,Dk,Dv), (B,H)
+        h_next = hst * jnp.exp(tot_c)[:, :, None, None] + s_c.astype(jnp.float32)
+        return h_next, hst                               # emit state *entering* chunk
+
+    h_last, h_in = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1).astype(dt)           # (B,nc,H,Dk,Dv)
+
+    y_inter = jnp.einsum(
+        "bclhd,bchdv->bclhv", qc * jnp.exp(cum)[..., None].astype(dt), h_in
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, dv)
+    return y, h_last.astype(jnp.float32)
+
+
+def linear_attention_step(
+    q: jax.Array,       # (B, H, Dk)
+    k: jax.Array,
+    v: jax.Array,       # (B, H, Dv)
+    log_decay: jax.Array,  # (B, H)
+    state: jax.Array,   # (B, H, Dk, Dv) f32
+) -> tuple[jax.Array, jax.Array]:
+    """Single decode step of the same recurrence. Returns (y, new_state)."""
+    dec = jnp.exp(log_decay.astype(jnp.float32))[:, :, None, None]
+    new_state = dec * state + (
+        k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    )
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), new_state)
+    return y.astype(q.dtype), new_state

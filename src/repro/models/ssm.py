@@ -1,0 +1,172 @@
+"""Mamba2 block (SSD), TPU-adapted: chunked scan via ``models.scan_core``.
+
+Structure follows arXiv:2405.21060 (single B/C group):
+
+    u -> in_proj -> [z (d_ssm) | x (d_ssm) | B (N) | C (N) | dt (H)]
+    x,B,C -> causal depthwise conv (width ssm_conv) -> silu
+    dt = softplus(dt + dt_bias); a = -exp(A_log)  (per head)
+    h_t = exp(dt a) h_{t-1} + dt * B x^T ;  y = C . h + D * x
+    out = out_proj( rmsnorm(y * silu(z)) )
+
+Decode carries ``{"conv": (B, ssm_conv-1, conv_dim), "state": (B,H,N,P)}``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import params as pr
+from repro.models import scan_core
+from repro.models.layers import rmsnorm, rmsnorm_specs
+
+Params = dict[str, Any]
+
+
+def _dims(cfg: ArchConfig):
+    d_ssm = cfg.d_ssm
+    n_heads = cfg.n_ssm_heads
+    n = cfg.ssm_state
+    conv_dim = d_ssm + 2 * n
+    return d_ssm, n_heads, n, conv_dim
+
+
+def mamba2_specs(cfg: ArchConfig) -> Params:
+    d_ssm, h, n, conv_dim = _dims(cfg)
+    d_in = 2 * d_ssm + 2 * n + h
+    return {
+        "ln": rmsnorm_specs(cfg.d_model),
+        "in_proj": pr.dense(cfg.d_model, d_in),
+        "conv_w": pr.ParamSpec((cfg.ssm_conv, conv_dim), "small"),
+        "conv_b": pr.bias(conv_dim),
+        "A_log": pr.ParamSpec((h,), "small"),
+        "dt_bias": pr.bias(h),
+        "D": pr.norm_scale(h),
+        "out_norm": rmsnorm_specs(d_ssm),
+        "out_proj": pr.dense(d_ssm, cfg.d_model),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    d_ssm, h, n, _ = _dims(cfg)
+    z, x, bmat, cmat, dt = jnp.split(
+        proj, [d_ssm, 2 * d_ssm, 2 * d_ssm + n, 2 * d_ssm + 2 * n], axis=-1
+    )
+    return z, x, bmat, cmat, dt
+
+
+def _conv_full(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Causal depthwise conv over (B, S, C) with taps (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for t in range(width):  # width is 4: unrolled FMA, VPU-friendly
+        out = out + pad[:, t : t + xbc.shape[1], :] * w[t].astype(xbc.dtype)
+    return out + b.astype(xbc.dtype)
+
+
+def _ssm_inner(cfg: ArchConfig, p: Params, x, bmat, cmat, dt_raw, *,
+               initial_state=None):
+    """Shared by full-seq; returns (y (B,S,d_ssm), final_state).
+
+    On TPU (no initial state) the chunk step runs as the fused Pallas SSD
+    kernel (kernels/ssd); elsewhere the pure-jnp chunked core."""
+    d_ssm, h, n, _ = _dims(cfg)
+    b_, s, _ = x.shape
+    pdim = cfg.ssm_head_dim
+    xh = x.reshape(b_, s, h, pdim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                     # (H,)
+    log_decay = dt * a                                               # (B,S,H)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b_, s, h, n)).astype(x.dtype)
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b_, s, h, n)).astype(x.dtype)
+    v = xh * dt[..., None].astype(x.dtype)
+    chunk = min(cfg.ssm_chunk, s)
+    if (jax.default_backend() == "tpu" and initial_state is None
+            and s % chunk == 0):
+        from repro.kernels.ssd import ssd_scan
+
+        def bh(t):  # (B,S,H,D) -> (B*H,S,D)
+            return t.transpose(0, 2, 1, 3).reshape(b_ * h, s, t.shape[-1])
+
+        y, state = ssd_scan(bh(q), bh(k), bh(v),
+                            log_decay.transpose(0, 2, 1).reshape(b_ * h, s)
+                            .astype(q.dtype),
+                            chunk=chunk)
+        y = y.reshape(b_, h, s, pdim).transpose(0, 2, 1, 3)
+        state = state.reshape(b_, h, n, pdim)
+    else:
+        y, state = scan_core.chunked_linear_attention(
+            q, k, v, log_decay, chunk=chunk, initial_state=initial_state)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    return y.reshape(b_, s, d_ssm), state
+
+
+def mamba2_apply(cfg: ArchConfig, p: Params, u: jax.Array,
+                 return_cache: bool = False):
+    """Full-sequence residual block. u: (B, S, d_model).
+
+    With ``return_cache`` also returns the decode cache after the last
+    position (prefill): conv tail + final SSM state."""
+    dt = u.dtype
+    xin = rmsnorm(p["ln"], u)
+    proj = xin @ p["in_proj"].astype(dt)
+    z, x, bmat, cmat, dtr = _split_proj(cfg, proj)
+    xbc_raw = jnp.concatenate([x, bmat, cmat], axis=-1)
+    xbc = jax.nn.silu(_conv_full(xbc_raw, p["conv_w"], p["conv_b"]))
+    d_ssm, _, n, _ = _dims(cfg)
+    x, bmat, cmat = jnp.split(xbc, [d_ssm, d_ssm + n], axis=-1)
+    y, state = _ssm_inner(cfg, p, x, bmat, cmat, dtr)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = u + y @ p["out_proj"].astype(dt)
+    if not return_cache:
+        return out
+    cache = {"conv": xbc_raw[:, -(cfg.ssm_conv - 1):, :], "state": state}
+    return out, cache
+
+
+# --- cached decode -----------------------------------------------------------
+
+def mamba2_cache_shape(cfg: ArchConfig, batch: int):
+    d_ssm, h, n, conv_dim = _dims(cfg)
+    return {
+        "conv": (batch, cfg.ssm_conv - 1, conv_dim),
+        "state": (batch, h, n, cfg.ssm_head_dim),
+    }
+
+
+def mamba2_decode(cfg: ArchConfig, p: Params, u: jax.Array, cache: Params
+                  ) -> tuple[jax.Array, Params]:
+    """u: (B, 1, d_model)."""
+    dt_ = u.dtype
+    d_ssm, h, n, conv_dim = _dims(cfg)
+    pdim = cfg.ssm_head_dim
+    xin = rmsnorm(p["ln"], u)
+    proj = (xin @ p["in_proj"].astype(dt_))[:, 0]        # (B, d_in)
+    z, x, bmat, cmat, dtr = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)       # (B, conv_dim)
+    hist = jnp.concatenate(
+        [cache["conv"].astype(dt_), xbc[:, None, :]], axis=1
+    )                                                     # (B, W, conv_dim)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, p["conv_w"].astype(dt_))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(dt_))
+    x, bmat, cmat = jnp.split(xbc, [d_ssm, d_ssm + n], axis=-1)
+
+    dtv = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    log_decay = dtv * a
+    xh = x.reshape(-1, h, pdim)
+    k = jnp.broadcast_to(bmat[:, None, :], (x.shape[0], h, n)).astype(dt_)
+    q = jnp.broadcast_to(cmat[:, None, :], (x.shape[0], h, n)).astype(dt_)
+    v = xh * dtv[..., None].astype(dt_)
+    y, state = scan_core.linear_attention_step(q, k, v, log_decay,
+                                               cache["state"])
+    y = y + xh * p["D"].astype(dt_)[None, :, None]
+    y = y.reshape(-1, 1, d_ssm)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z[:, None, :]))
+    out = u + y @ p["out_proj"].astype(dt_)
+    return out, {"conv": hist[:, 1:, :].astype(cache["conv"].dtype),
+                 "state": state}

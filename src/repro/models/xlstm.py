@@ -1,0 +1,234 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunked-parallel
+via ``models.scan_core``) and sLSTM (scalar memory, strictly sequential
+recurrence with per-head recurrent weights, ``lax.scan`` over time).
+
+Numerics simplification (recorded in DESIGN.md): instead of the paper's
+max-stabilizer ``m_t`` we clip the exponential input gate to [-10, 5] and
+stabilize the mLSTM output by ``max(|q . n|, 1)``; sLSTM forget gate is
+sigmoid.  Functionally equivalent regimes, stable in bf16.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import params as pr
+from repro.models import scan_core
+from repro.models.layers import rmsnorm, rmsnorm_specs
+
+Params = dict[str, Any]
+
+_ICLIP = (-10.0, 5.0)
+
+
+def _headnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS norm. x: (..., H, P); scale: (H*P,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y.reshape(*x.shape[:-2], -1) * scale).astype(x.dtype).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ArchConfig) -> Params:
+    d, d_ssm, h = cfg.d_model, cfg.d_ssm, cfg.n_heads
+    return {
+        "ln": rmsnorm_specs(d),
+        "up_proj": pr.dense(d, 2 * d_ssm),        # [x | z]
+        "conv_w": pr.ParamSpec((cfg.ssm_conv, d_ssm), "small"),
+        "conv_b": pr.bias(d_ssm),
+        "wq": pr.dense(d_ssm, d_ssm),
+        "wk": pr.dense(d_ssm, d_ssm),
+        "wv": pr.dense(d_ssm, d_ssm),
+        "w_igate": pr.dense(d_ssm, h),
+        "w_fgate": pr.dense(d_ssm, h),
+        "out_norm": pr.norm_scale(d_ssm),
+        "down_proj": pr.dense(d_ssm, d),
+    }
+
+
+def _mlstm_qkv(cfg: ArchConfig, p: Params, xc: jax.Array, xr: jax.Array):
+    """xc: conv'd branch (..., d_ssm); xr: raw branch."""
+    h = cfg.n_heads
+    pdim = cfg.d_ssm // h
+    dt = xc.dtype
+
+    def heads(t):
+        return t.reshape(*t.shape[:-1], h, pdim)
+
+    q = heads(xc @ p["wq"].astype(dt)) / jnp.sqrt(pdim).astype(dt)
+    k = heads(xc @ p["wk"].astype(dt))
+    v = heads(xr @ p["wv"].astype(dt))
+    igate = jnp.clip((xc @ p["w_igate"].astype(dt)).astype(jnp.float32),
+                     *_ICLIP)
+    fgate = (xc @ p["w_fgate"].astype(dt)).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(fgate)              # (..., H)
+    return q, k, v, jnp.exp(igate), log_f
+
+
+def _stabilized(y_aug: jax.Array, pdim: int) -> jax.Array:
+    yv, den = y_aug[..., :pdim], y_aug[..., pdim]
+    den = jnp.maximum(jnp.abs(den.astype(jnp.float32)), 1.0)
+    return (yv.astype(jnp.float32) / den[..., None]).astype(y_aug.dtype)
+
+
+def mlstm_apply(cfg: ArchConfig, p: Params, u: jax.Array,
+                return_cache: bool = False):
+    """Full-sequence residual mLSTM block. u: (B, S, d_model)."""
+    from repro.models.ssm import _conv_full  # same causal depthwise conv
+    b, s, _ = u.shape
+    h = cfg.n_heads
+    pdim = cfg.d_ssm // h
+    dt = u.dtype
+    xin = rmsnorm(p["ln"], u)
+    x, z = jnp.split(xin @ p["up_proj"].astype(dt), 2, axis=-1)
+    xc = jax.nn.silu(_conv_full(x, p["conv_w"], p["conv_b"]))
+    q, k, v, i_scale, log_f = _mlstm_qkv(cfg, p, xc, x)
+    ones = jnp.ones((*v.shape[:-1], 1), dt)
+    v_aug = jnp.concatenate([v, ones], axis=-1) * i_scale[..., None].astype(dt)
+    y_aug, state = scan_core.chunked_linear_attention(
+        q, k, v_aug, log_f, chunk=min(cfg.ssm_chunk, s))
+    y = _stabilized(y_aug, pdim).reshape(b, s, cfg.d_ssm)
+    y = _headnorm(p["out_norm"], y.reshape(b, s, h, pdim)).reshape(b, s, -1)
+    y = y * jax.nn.silu(z)
+    out = u + y @ p["down_proj"].astype(dt)
+    if not return_cache:
+        return out
+    return out, {"conv": x[:, -(cfg.ssm_conv - 1):, :], "state": state}
+
+
+def mlstm_cache_shape(cfg: ArchConfig, batch: int):
+    h = cfg.n_heads
+    pdim = cfg.d_ssm // h
+    return {
+        "conv": (batch, cfg.ssm_conv - 1, cfg.d_ssm),
+        "state": (batch, h, pdim, pdim + 1),
+    }
+
+
+def mlstm_decode(cfg: ArchConfig, p: Params, u: jax.Array, cache: Params
+                 ) -> tuple[jax.Array, Params]:
+    b = u.shape[0]
+    h = cfg.n_heads
+    pdim = cfg.d_ssm // h
+    dt = u.dtype
+    xin = rmsnorm(p["ln"], u)
+    x, z = jnp.split((xin @ p["up_proj"].astype(dt))[:, 0], 2, axis=-1)
+    hist = jnp.concatenate([cache["conv"].astype(dt), x[:, None, :]], axis=1)
+    xc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", hist, p["conv_w"].astype(dt))
+        + p["conv_b"].astype(dt))
+    q, k, v, i_scale, log_f = _mlstm_qkv(cfg, p, xc, x)
+    ones = jnp.ones((*v.shape[:-1], 1), dt)
+    v_aug = jnp.concatenate([v, ones], axis=-1) * i_scale[..., None].astype(dt)
+    y_aug, state = scan_core.linear_attention_step(
+        q, k, v_aug, log_f, cache["state"])
+    y = _stabilized(y_aug, pdim)
+    y = _headnorm(p["out_norm"], y).reshape(b, 1, -1)
+    y = y * jax.nn.silu(z[:, None, :])
+    out = u + y @ p["down_proj"].astype(dt)
+    return out, {"conv": hist[:, 1:, :].astype(cache["conv"].dtype),
+                 "state": state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ArchConfig) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    pdim = d // h
+    gate = {"w": pr.dense(d, d), "r": pr.dense(pdim, pdim, h), "b": pr.bias(d)}
+    ff = max(64, (4 * d // 3) // 64 * 64)
+    return {
+        "ln": rmsnorm_specs(d),
+        "zgate": dict(gate), "igate": dict(gate),
+        "fgate": dict(gate), "ogate": dict(gate),
+        "out_norm": pr.norm_scale(d),
+        "out_proj": pr.dense(d, d),
+        "ffn_ln": rmsnorm_specs(d),
+        "ffn_wi": pr.dense(d, ff),
+        "ffn_wo": pr.dense(ff, d),
+    }
+
+
+def _slstm_gates(cfg: ArchConfig, p: Params, x_t: jax.Array, h_prev: jax.Array):
+    """x_t: (B, d); h_prev: (B, H, P). Returns raw gate pre-activations."""
+    h = cfg.n_heads
+    pdim = cfg.d_model // h
+    dt = x_t.dtype
+
+    def gate(gp):
+        wx = x_t @ gp["w"].astype(dt)
+        rh = jnp.einsum("bhp,hpq->bhq", h_prev, gp["r"].astype(dt))
+        return (wx.reshape(-1, h, pdim) + rh
+                + gp["b"].astype(dt).reshape(h, pdim))
+
+    return gate(p["zgate"]), gate(p["igate"]), gate(p["fgate"]), gate(p["ogate"])
+
+
+def _slstm_step(cfg: ArchConfig, p: Params, x_t, c, n, h_prev):
+    z_r, i_r, f_r, o_r = _slstm_gates(cfg, p, x_t, h_prev)
+    zf = jnp.tanh(z_r.astype(jnp.float32))
+    i = jnp.exp(jnp.clip(i_r.astype(jnp.float32), *_ICLIP))
+    f = jax.nn.sigmoid(f_r.astype(jnp.float32))
+    o = jax.nn.sigmoid(o_r.astype(jnp.float32))
+    c_new = f * c + i * zf
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return c_new, n_new, h_new
+
+
+def slstm_apply(cfg: ArchConfig, p: Params, u: jax.Array,
+                return_cache: bool = False):
+    """Full-sequence residual sLSTM block (sequential scan over time)."""
+    b, s, d = u.shape
+    h = cfg.n_heads
+    pdim = d // h
+    dt = u.dtype
+    xin = rmsnorm(p["ln"], u)
+
+    def step(carry, x_t):
+        c, n, hp = carry
+        c, n, hn = _slstm_step(cfg, p, x_t, c, n, hp)
+        return (c, n, hn), hn.astype(dt)
+
+    zeros = jnp.zeros((b, h, pdim), jnp.float32)
+    (c_f, n_f, h_f), hs = jax.lax.scan(step, (zeros, zeros, zeros),
+                                       jnp.moveaxis(xin, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)                       # (B, S, H, P)
+    y = _headnorm(p["out_norm"], y).reshape(b, s, d)
+    u = u + y @ p["out_proj"].astype(dt)
+    # post up/down FFN (xLSTM proj factor 4/3)
+    f = jax.nn.gelu(rmsnorm(p["ffn_ln"], u) @ p["ffn_wi"].astype(dt))
+    out = u + f @ p["ffn_wo"].astype(dt)
+    if not return_cache:
+        return out
+    return out, {"c": c_f, "n": n_f, "h": h_f}
+
+
+def slstm_cache_shape(cfg: ArchConfig, batch: int):
+    h = cfg.n_heads
+    pdim = cfg.d_model // h
+    st = (batch, h, pdim)
+    return {"c": st, "n": st, "h": st}
+
+
+def slstm_decode(cfg: ArchConfig, p: Params, u: jax.Array, cache: Params
+                 ) -> tuple[jax.Array, Params]:
+    b, _, d = u.shape
+    dt = u.dtype
+    xin = rmsnorm(p["ln"], u)[:, 0]
+    c, n, hn = _slstm_step(cfg, p, xin, cache["c"], cache["n"], cache["h"])
+    y = _headnorm(p["out_norm"], hn.astype(dt)).reshape(b, 1, d)
+    u = u + y @ p["out_proj"].astype(dt)
+    f = jax.nn.gelu(rmsnorm(p["ffn_ln"], u) @ p["ffn_wi"].astype(dt))
+    out = u + f @ p["ffn_wo"].astype(dt)
+    return out, {"c": c, "n": n, "h": hn}

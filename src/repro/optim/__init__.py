@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, adamw, apply_updates
+from repro.optim.schedule import constant, cosine_warmup, linear_warmup
+
+__all__ = ["AdamWConfig", "adamw", "apply_updates",
+           "cosine_warmup", "linear_warmup", "constant"]

@@ -1,0 +1,84 @@
+"""AdamW with global-norm clipping, decoupled weight decay, and
+schedule support -- pure pytree implementation (no optax dependency in
+this container).  Optimizer state shards exactly like the parameters
+(m/v inherit each param's PartitionSpec)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], AdamWState]
+    update: Callable[[Any, AdamWState, Any], tuple[Any, AdamWState]]
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw(cfg: AdamWConfig, schedule: Callable | None = None) -> Optimizer:
+    sched = schedule or (lambda step: jnp.asarray(cfg.lr, jnp.float32))
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree.map(jnp.copy, zeros))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        m = jax.tree.map(lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g,
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: cfg.b2 * vv + (1 - cfg.b2) * g * g,
+                         state.v, grads)
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+        lr = sched(step)
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            du = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+            return (-lr * du).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        return updates, AdamWState(step, m, v)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def opt_shapes(params_shapes: Any) -> AdamWState:
+    """ShapeDtypeStruct tree for the dry-run (mirrors init)."""
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_shapes)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), zeros,
+                      jax.tree.map(lambda z: z, zeros))

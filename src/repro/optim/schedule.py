@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        up = s / max(warmup, 1)
+        down = 1.0 - (s - warmup) / max(total - warmup, 1)
+        return lr * jnp.clip(jnp.minimum(up, down), floor / lr, 1.0)
+    return f
+
+
+def cosine_warmup(lr: float, warmup: int, total: int, floor_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        up = s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * jnp.where(s < warmup, up, cos)
+    return f

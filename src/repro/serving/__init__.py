@@ -1,0 +1,4 @@
+from repro.serving.continuous import ContinuousEngine, Request
+from repro.serving.engine import ServeEngine, make_serve_step
+
+__all__ = ["ServeEngine", "make_serve_step", "ContinuousEngine", "Request"]

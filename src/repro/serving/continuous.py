@@ -1,0 +1,106 @@
+"""Continuous batching (vLLM-style slot scheduler, static shapes).
+
+The decode step always runs the full ``max_batch`` of slots; each slot
+carries its OWN absolute position (per-slot ``pos`` in the cache, see
+``models.layers.attn_decode``).  When a request finishes, its slot is
+refilled from the queue: the new prompt is prefilled at batch=1 and its
+cache leaves are spliced into the live batch cache at the slot index
+(`_splice`, which locates the batch axis of every leaf by shape
+difference -- works across all four cache families).  No running request
+is ever stalled by another request's prefill length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serving.engine import greedy
+
+
+def _splice(batch_cache: Any, one_cache: Any, slot: int) -> Any:
+    """Write a batch=1 cache into slot ``slot`` of a batch=B cache."""
+
+    def leaf(big, one):
+        if big.shape == one.shape:          # scalars/shared leaves
+            return big
+        axis = next(i for i, (a, b) in enumerate(zip(big.shape, one.shape))
+                    if a != b)
+        idx = (0,) * axis + (slot,) + (0,) * (big.ndim - axis - 1)
+        return jax.lax.dynamic_update_slice(big, one.astype(big.dtype), idx)
+
+    return jax.tree.map(leaf, batch_cache, one_cache)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ContinuousEngine:
+    model: Model
+    params: Any
+    max_batch: int
+    max_seq: int
+    eos_id: int = 1
+
+    def __post_init__(self):
+        self._prefill1 = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.max_seq))
+        self._step = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._splice_j = jax.jit(_splice, static_argnums=(2,),
+                                 donate_argnums=(0,))
+
+    def serve(self, requests: list[Request], max_steps: int = 10_000
+              ) -> list[Request]:
+        """Run until every request completes.  Requests beyond
+        ``max_batch`` wait in the queue and join as slots free up."""
+        b = self.max_batch
+        queue = list(requests)
+        slots: list[Request | None] = [None] * b
+        cache = self.model.init_cache(b, self.max_seq)
+        cur = jnp.zeros((b, 1), jnp.int32)
+
+        def admit(slot_id: int, cache, cur):
+            req = queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits1, cache1 = self._prefill1(self.params, {"tokens": prompt})
+            cache = self._splice_j(cache, cache1, slot_id)
+            tok = int(jnp.argmax(logits1[0, -1]))
+            req.out.append(tok)
+            slots[slot_id] = req
+            return cache, cur.at[slot_id, 0].set(tok)
+
+        for i in range(b):
+            if queue:
+                cache, cur = admit(i, cache, cur)
+
+        for _ in range(max_steps):
+            active = [i for i, r in enumerate(slots) if r is not None]
+            if not active:
+                break
+            logits, cache = self._step(self.params, cache, {"tokens": cur})
+            nxt = greedy(logits)
+            for i in active:
+                req = slots[i]
+                tok = int(nxt[i, 0])
+                finished = (tok == self.eos_id
+                            or len(req.out) >= req.max_new)
+                if not finished:
+                    req.out.append(tok)
+                else:
+                    req.done = True
+                    slots[i] = None
+                    if queue:   # refill the slot without stalling others
+                        cache, nxt = admit(i, cache, nxt)
+            cur = nxt
+        return requests

@@ -1,0 +1,76 @@
+"""Serving: batched prefill + cached greedy/top-k decode.
+
+``make_serve_step`` is the function the decode dry-run shapes
+(decode_32k / long_500k) lower: ONE new token against a KV cache of
+``max_seq`` -- params + cache donated, logits out.
+
+``ServeEngine`` is the host-side driver: a request batcher that pads
+requests into a fixed batch, runs prefill once, then steps the decoder,
+with per-request stop handling.  (Continuous batching is future work;
+the engine uses static batches like the paper's per-patient jobs.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+def make_serve_step(model: Model):
+    """(params, cache, tokens (B,1)) -> (logits (B,1,V), new cache)."""
+
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return serve_step
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    params: Any
+    max_batch: int
+    max_seq: int
+    eos_id: int = 1
+    sample: Callable[[jax.Array], jax.Array] = staticmethod(greedy)
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.max_seq))
+        self._step = jax.jit(make_serve_step(self.model),
+                             donate_argnums=(1,))
+
+    def _pad_requests(self, prompts: list[np.ndarray]) -> jax.Array:
+        assert len(prompts) <= self.max_batch
+        width = max(len(p) for p in prompts)
+        batch = np.zeros((self.max_batch, width), np.int32)
+        for i, p in enumerate(prompts):
+            batch[i, width - len(p):] = p   # left-pad (simple static batcher)
+        return jnp.asarray(batch)
+
+    def generate(self, prompts: list[np.ndarray], max_new: int = 32
+                 ) -> list[np.ndarray]:
+        tokens = self._pad_requests(prompts)
+        logits, cache = self._prefill(self.params, {"tokens": tokens})
+        out = []
+        done = np.zeros(self.max_batch, bool)
+        cur = self.sample(logits)
+        for _ in range(max_new):
+            out.append(np.asarray(cur[:, 0]))
+            done |= out[-1] == self.eos_id
+            if done[: len(prompts)].all():
+                break
+            logits, cache = self._step(self.params, cache, {"tokens": cur})
+            cur = self.sample(logits)
+        gen = np.stack(out, axis=1)  # (B, T)
+        return [gen[i] for i in range(len(prompts))]

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (
+    batch_pspecs,
+    cache_pspecs,
+    logits_pspec,
+    param_pspecs,
+)
+
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "logits_pspec"]

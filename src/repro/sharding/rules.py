@@ -1,0 +1,299 @@
+"""Sharding rules: map every parameter / batch / cache leaf to a
+PartitionSpec on the production mesh (DESIGN.md Sec. 6).
+
+Logical axes:
+  * ``batch``  -> ("pod", "data") on the multi-pod mesh, ("data",) single-pod;
+  * ``fsdp``   -> "data"  (ZeRO-style parameter sharding within a pod;
+                  params replicated across pods -- cross-pod all-gathers per
+                  layer would swamp DCI);
+  * ``tp``     -> "model" (tensor / expert / head parallelism);
+  * ``seq``    -> "data"  (long_500k: batch=1, shard KV-cache sequence).
+
+Every assignment is guarded by divisibility: a dim that does not divide by
+its mesh axis size falls back to replication (e.g. paligemma's 8 heads on
+a 16-way model axis shard the flattened q dim instead of the head axis).
+
+Rules are NAME-BASED over the param tree paths, so they apply uniformly to
+all 10 archs, stacked-layer axes included (stack axes are never sharded).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+
+# parameter-name -> (row_logical, col_logical) for the trailing two dims;
+# 1-D params are replicated unless listed in _VEC rules.
+_MATRIX_RULES: dict[str, tuple[str | None, str | None]] = {
+    "embed": ("tp", None),          # big vocab sharded over model
+    "unembed": ("fsdp", "tp"),
+    "frontend_proj": (None, "fsdp"),
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "wi": ("fsdp", "tp"),
+    "wi_gate": ("fsdp", "tp"),
+    "wi_up": ("fsdp", "tp"),
+    "in_proj": ("fsdp", "tp"),
+    "out_proj": ("tp", "fsdp"),
+    "up_proj": ("fsdp", "tp"),
+    "down_proj": ("tp", "fsdp"),
+    "router": ("fsdp", None),
+    "w_igate": ("fsdp", None),
+    "w_fgate": ("fsdp", None),
+    "ffn_wi": ("fsdp", "tp"),
+    "ffn_wo": ("tp", "fsdp"),
+    "w": ("fsdp", "tp"),            # slstm gate input weights
+    "r": (None, None),              # slstm recurrent (H, P, P): replicated
+}
+
+# MoE expert tensors (E, d, f): E -> tp (expert parallel), d/f -> fsdp.
+_EXPERT_PARAMS = {"wi_gate", "wi_up", "wo"}
+
+
+def _axes(mesh: Mesh, strategy: str = "2d"):
+    """Sharding strategies (the hillclimb lever; EXPERIMENTS.md §Perf):
+
+    * "2d"   -- batch over (pod, data); params FSDP over data + TP over
+                model.  The default; right for big models.
+    * "fsdp" -- batch AND params over (pod?, data, model) flattened: pure
+                ZeRO-3, no tensor parallelism (no per-layer activation
+                all-reduce).  Right for small models where TP collectives
+                dominate.
+    * "dp"   -- batch over every axis, params replicated (classic data
+                parallel; the paper's own MapReduce layout).
+    """
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    if strategy == "2d":
+        return {"batch": dp, "fsdp": "data", "tp": "model"}
+    allax = dp + ("model",)
+    if strategy == "fsdp":
+        return {"batch": allax, "fsdp": ("data", "model"), "tp": None}
+    if strategy == "dp":
+        return {"batch": allax, "fsdp": None, "tp": None}
+    if strategy == "dp_vocab":
+        # classic data-parallel blocks (the paper's MapReduce layout) but
+        # with the vocab-sized embed/unembed/logits still tensor-sharded
+        # over 'model' -- replicated 600 MB+ logits otherwise dominate HBM
+        # (measured: C2_dp blew 59 GB temp on qwen3-0.6b).
+        return {"batch": dp, "fsdp": None, "tp": "model"}
+    raise ValueError(strategy)
+
+
+def _fits(dim: int, mesh: Mesh, logical, axes) -> bool:
+    ax = axes.get(logical) if isinstance(logical, str) else logical
+    if ax is None:
+        return True
+    if isinstance(ax, tuple):
+        total = 1
+        for a in ax:
+            total *= mesh.shape[a]
+        return dim % total == 0
+    return dim % mesh.shape[ax] == 0
+
+
+def _resolve(logical, axes):
+    if logical is None:
+        return None
+    return axes[logical]
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def param_pspecs(cfg: ArchConfig, mesh: Mesh, param_shapes: Any,
+                 strategy: str = "2d", align_heads: bool = True) -> Any:
+    """Tree of PartitionSpec matching ``param_shapes`` (ShapeDtypeStructs
+    or arrays).
+
+    ``align_heads`` (§Perf iteration, default on): only tensor-shard
+    attention projections when the HEAD COUNT divides the tp axis.
+    Sharding the flattened q dim with a non-dividing head count (e.g.
+    deepseek's 56 heads on tp=16) makes GSPMD re-partition at the
+    (B,S,H,hd) reshape and emit a per-attention-chunk all-reduce --
+    measured 3.7 TB/device on deepseek prefill_32k."""
+    axes = _axes(mesh, strategy)
+    tp_size = _axis_size(mesh, axes["tp"])
+
+    def rule(path, leaf) -> P:
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        inside_moe = "moe" in names
+        if strategy == "dp_vocab" and name not in ("embed", "unembed"):
+            return P()
+        if align_heads and tp_size > 1:
+            def fsdp_only(row: bool) -> P:
+                ax = (_resolve("fsdp", axes)
+                      if _fits(shape[-2 if row else -1], mesh, "fsdp", axes)
+                      else None)
+                spec = [None] * (len(shape) - 2) + (
+                    [ax, None] if row else [None, ax])
+                return P(*spec)
+            if name == "wq" and cfg.n_heads % tp_size:
+                return fsdp_only(row=True)
+            if name in ("wk", "wv") and cfg.n_kv_heads % tp_size:
+                return fsdp_only(row=True)
+            if name in ("bq",) and cfg.n_heads % tp_size:
+                return P()
+            if name in ("bk", "bv") and cfg.n_kv_heads % tp_size:
+                return P()
+            if name == "wo" and cfg.n_heads % tp_size:
+                return fsdp_only(row=False)
+        if name in _MATRIX_RULES and len(shape) >= 2:
+            if inside_moe and name in _EXPERT_PARAMS and len(shape) >= 3:
+                # (stack..., E, d, f): expert axis -> tp (expert parallel);
+                # if E does not divide tp (e.g. mixtral's 8 experts on a
+                # 16-way model axis), fall back to TENSOR parallelism
+                # WITHIN each expert: shard the FFN dim over tp.
+                e_dim, r_dim, c_dim = shape[-3], shape[-2], shape[-1]
+                if _fits(e_dim, mesh, "tp", axes) and axes["tp"]:
+                    e_ax, r_ax, c_ax = "tp", (
+                        "fsdp" if _fits(r_dim, mesh, "fsdp", axes)
+                        else None), None
+                else:
+                    ffn_dim_is_col = name in ("wi_gate", "wi_up")
+                    e_ax = None
+                    if ffn_dim_is_col:
+                        r_ax = ("fsdp" if _fits(r_dim, mesh, "fsdp", axes)
+                                else None)
+                        c_ax = ("tp" if _fits(c_dim, mesh, "tp", axes)
+                                else None)
+                    else:  # wo: (E, f, d)
+                        r_ax = ("tp" if _fits(r_dim, mesh, "tp", axes)
+                                else None)
+                        c_ax = ("fsdp" if _fits(c_dim, mesh, "fsdp", axes)
+                                else None)
+                spec = [None] * (len(shape) - 3) + [
+                    _resolve(e_ax, axes), _resolve(r_ax, axes),
+                    _resolve(c_ax, axes)]
+                return P(*spec)
+            row_l, col_l = _MATRIX_RULES[name]
+            if not _fits(shape[-2], mesh, row_l, axes):
+                row_l = None
+            if not _fits(shape[-1], mesh, col_l, axes):
+                col_l = None
+            if row_l and col_l and axes[row_l] == axes[col_l]:
+                col_l = None  # never the same axis twice
+            spec = [None] * (len(shape) - 2) + [
+                _resolve(row_l, axes), _resolve(col_l, axes)]
+            return P(*spec)
+        # vectors & norms: shard big trailing dims over tp when they are
+        # per-hidden (biases of sharded matmuls stay aligned with outputs)
+        if name in ("bq", "bk", "bv", "bi", "conv_b") and len(shape) >= 1 \
+                and _fits(shape[-1], mesh, "tp", axes):
+            return P(*([None] * (len(shape) - 1) + ["model"]))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, param_shapes)
+
+
+def batch_pspecs(cfg: ArchConfig, mesh: Mesh, batch: Any,
+                 strategy: str = "2d") -> Any:
+    """Leading (global batch) axis over the strategy's batch axes."""
+    axes = _axes(mesh, strategy)
+    batch_ax = axes["batch"]
+
+    def rule(path, leaf):
+        b = leaf.shape[0]
+        if _fits(b, mesh, batch_ax, axes):
+            return P(batch_ax, *([None] * (len(leaf.shape) - 1)))
+        if len(batch_ax) > 1 and _fits(b, mesh, ("data",), axes):
+            return P("data", *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def logits_pspec(cfg: ArchConfig, mesh: Mesh, batch_size: int,
+                 strategy: str = "2d") -> P:
+    axes = _axes(mesh, strategy)
+    b_ax = axes["batch"] if _fits(batch_size, mesh, axes["batch"], axes) \
+        else (("data",) if _fits(batch_size, mesh, ("data",), axes) else None)
+    v_ax = "model" if _fits(cfg.vocab_size, mesh, "tp", axes) else None
+    return P(b_ax, None, v_ax)
+
+
+def cache_pspecs(cfg: ArchConfig, mesh: Mesh, cache_shapes: Any,
+                 batch_size: int, strategy: str = "2d") -> Any:
+    """Decode caches.  Batch over ('pod','data') when divisible; heads /
+    hidden over 'model' when divisible; batch=1 long-context shards the
+    KV sequence dim over 'data' instead (sequence parallelism)."""
+    axes = _axes(mesh, strategy)
+    batch_ax = axes["batch"] if _fits(batch_size, mesh, axes["batch"], axes) \
+        else (("data",) if _fits(batch_size, mesh, ("data",), axes) else None)
+    seq_parallel = batch_ax is None   # batch=1 (long_500k)
+
+    def rule(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        if name in ("k", "v"):
+            # (sites?, L?, B, S, K, hd)
+            nd = len(shape)
+            spec = [None] * nd
+            spec[nd - 4] = batch_ax
+            seq_axes = []
+            if seq_parallel:
+                seq_axes.append("data")
+            if _fits(shape[nd - 2], mesh, "tp", axes) and axes["tp"]:
+                spec[nd - 2] = "model"
+            else:
+                # few KV heads (GQA/MQA): shard the cache SEQUENCE over
+                # 'model' instead -- attention reduces over S with a psum.
+                seq_axes.append("model")
+            total = 1
+            for a in seq_axes:
+                total *= mesh.shape[a]
+            if seq_axes and shape[nd - 3] % total == 0:
+                spec[nd - 3] = tuple(seq_axes) if len(seq_axes) > 1 \
+                    else seq_axes[0]
+            return P(*spec)
+        if name == "state":
+            # mamba: (..., B, H, N, Pd) / mlstm: (..., B, H, Pd, Pd+1)
+            nd = len(shape)
+            spec = [None] * nd
+            spec[nd - 4] = batch_ax
+            if _fits(shape[nd - 3], mesh, "tp", axes):
+                spec[nd - 3] = "model"     # heads
+            elif _fits(shape[nd - 2], mesh, "tp", axes):
+                spec[nd - 2] = "model"     # xlstm: few heads, shard Dk
+            return P(*spec)
+        if name == "conv":
+            # (..., B, W-1, conv_dim)
+            nd = len(shape)
+            spec = [None] * nd
+            spec[nd - 3] = batch_ax
+            if _fits(shape[nd - 1], mesh, "tp", axes):
+                spec[nd - 1] = "model"
+            return P(*spec)
+        if name in ("c", "n", "h"):
+            # slstm states (..., B, H, Pd)
+            nd = len(shape)
+            spec = [None] * nd
+            spec[nd - 3] = batch_ax
+            if _fits(shape[nd - 1], mesh, "tp", axes):
+                spec[nd - 1] = "model"
+            return P(*spec)
+        return P()  # pos scalar etc.
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

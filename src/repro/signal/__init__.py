@@ -1,0 +1,5 @@
+"""EEG signal-processing substrate (MSPCA, DWT/WPD, features, pipeline)."""
+
+from repro.signal import eeg_data, features, mspca, pipeline, wavelet
+
+__all__ = ["eeg_data", "features", "mspca", "pipeline", "wavelet"]

@@ -1,0 +1,201 @@
+"""Synthetic Freiburg-like EEG (the data gate of this reproduction).
+
+The FSPEEG database is access-gated, so per DESIGN.md Sec. 3 we generate
+patient-conditioned surrogate EEG with the same acquisition geometry the
+paper uses: 256 Hz, 3 channels, regimes {interictal, preictal, ictal},
+windowed into 2048-sample (8 s) segments, 60 windows per 8-minute matrix.
+
+Regime dynamics (standard seizure-EEG phenomenology):
+  * interictal -- 1/f background + alpha (8-12 Hz) + beta (13-30 Hz)
+    rhythms, weak inter-channel correlation.
+  * preictal   -- theta (4-8 Hz) power ramps up, channel synchrony rises,
+    variance drifts upward toward the seizure onset.
+  * ictal      -- high-amplitude 3-5 Hz spike-wave discharge, strongly
+    synchronized across channels.
+
+Per-patient variation: rhythm amplitudes, dominant frequencies, noise
+level and preictal ramp rate are drawn from a patient-keyed RNG, so the
+five "patients" of the paper's tables are five reproducible distributions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+FS = 256            # Hz, Freiburg sampling rate
+N_CHANNELS = 3      # channels the paper uses
+WINDOW = 2048       # 8 s x 256 Hz
+WINDOWS_PER_MATRIX = 60  # 8 minutes of 8-second windows
+
+INTERICTAL, PREICTAL, ICTAL = 0, 1, 2
+
+
+class PatientParams(NamedTuple):
+    alpha_amp: jax.Array
+    beta_amp: jax.Array
+    theta_amp: jax.Array
+    alpha_freq: jax.Array
+    spike_freq: jax.Array
+    noise: jax.Array
+    ramp: jax.Array          # preictal drift rate
+    synchrony: jax.Array     # ictal cross-channel coupling
+
+
+def patient_params(patient_id: int) -> PatientParams:
+    key = jax.random.PRNGKey(1000 + patient_id)
+    ks = jax.random.split(key, 8)
+    u = lambda k, lo, hi: jax.random.uniform(k, (), minval=lo, maxval=hi)
+    return PatientParams(
+        alpha_amp=u(ks[0], 8.0, 15.0),
+        beta_amp=u(ks[1], 2.0, 5.0),
+        theta_amp=u(ks[2], 3.0, 7.0),
+        alpha_freq=u(ks[3], 8.5, 11.5),
+        spike_freq=u(ks[4], 3.0, 5.0),
+        noise=u(ks[5], 2.0, 6.0),
+        ramp=u(ks[6], 0.5, 2.0),
+        synchrony=u(ks[7], 0.6, 0.95),
+    )
+
+
+def _pink_noise(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    """Approximate 1/f noise: white noise shaped in the rfft domain."""
+    n = shape[-1]
+    white = jax.random.normal(key, shape)
+    spec = jnp.fft.rfft(white, axis=-1)
+    freqs = jnp.fft.rfftfreq(n, d=1.0 / FS)
+    scale = 1.0 / jnp.sqrt(jnp.maximum(freqs, 1.0))
+    pink = jnp.fft.irfft(spec * scale, n=n, axis=-1).astype(jnp.float32)
+    # Normalize to unit std so PatientParams.noise is the actual noise
+    # amplitude in microvolts.
+    return pink / (jnp.std(pink, axis=-1, keepdims=True) + 1e-8)
+
+
+@functools.partial(jax.jit, static_argnames=("n_windows", "state"))
+def generate_windows(
+    key: jax.Array, patient_id: jax.Array, state: int, n_windows: int
+) -> jax.Array:
+    """(n_windows, N_CHANNELS, WINDOW) float32 EEG in microvolts.
+
+    ``state`` is one of INTERICTAL / PREICTAL / ICTAL (static). For
+    PREICTAL, window index within the batch parameterizes the drift toward
+    onset (later windows are closer to the seizure).
+    """
+    pp = jax.tree.map(
+        lambda a, b: jnp.where(patient_id % 2 == 0, a, b),
+        patient_params(0), patient_params(1),
+    )
+    # Patient conditioning beyond parity: fold the id into the RNG and mix
+    # two anchor parameter draws (keeps the function jit-able with a traced
+    # patient id while still giving distinct per-patient statistics).
+    key = jax.random.fold_in(key, patient_id)
+    mix = (patient_id % 5).astype(jnp.float32) / 4.0
+    pp = jax.tree.map(
+        lambda a: a * (0.8 + 0.4 * mix), pp
+    )
+
+    t = jnp.arange(n_windows * WINDOW, dtype=jnp.float32) / FS
+    t = t.reshape(n_windows, WINDOW)
+
+    k_noise, k_phase, k_sync, k_amp = jax.random.split(key, 4)
+    phases = jax.random.uniform(
+        k_phase, (N_CHANNELS, 4), maxval=2 * jnp.pi
+    )  # per channel: alpha, beta, theta, spike
+
+    # Window-dependent drift: 0 at batch start -> 1 at batch end.
+    drift = jnp.arange(n_windows, dtype=jnp.float32) / max(n_windows - 1, 1)
+    drift = drift[:, None]  # (W, 1) broadcast over time
+
+    def channel(c, kn):
+        ph = phases[c]
+        alpha = pp.alpha_amp * jnp.sin(2 * jnp.pi * pp.alpha_freq * t + ph[0])
+        beta = pp.beta_amp * jnp.sin(2 * jnp.pi * 21.0 * t + ph[1])
+        theta = pp.theta_amp * jnp.sin(2 * jnp.pi * 6.0 * t + ph[2])
+        noise = pp.noise * _pink_noise(kn, t.shape)
+
+        if state == INTERICTAL:
+            sig = alpha + beta + 0.3 * theta + noise
+        elif state == PREICTAL:
+            ramp = 1.0 + pp.ramp * drift
+            sync_theta = pp.theta_amp * jnp.sin(2 * jnp.pi * 6.0 * t)  # common phase
+            # Precursor spike-waves: sharpened (high-kurtosis) theta bursts
+            # whose amplitude ramps toward onset -- the monotonic signature
+            # WPD statistics latch onto.
+            carrier = jnp.sin(2 * jnp.pi * 6.0 * t)
+            sharp = jnp.sign(carrier) * jnp.abs(carrier) ** 0.3
+            sig = (
+                alpha * (1.0 - 0.3 * drift)
+                + beta
+                + ramp * (0.5 * theta + pp.synchrony * sync_theta)
+                + pp.theta_amp * (0.5 + 1.2 * drift) * sharp
+                + noise * (1.0 + 0.5 * drift)
+            )
+        else:  # ICTAL: spike-wave discharge, shared phase across channels
+            carrier = jnp.sin(2 * jnp.pi * pp.spike_freq * t)
+            spikes = jnp.sign(carrier) * jnp.abs(carrier) ** 0.3  # sharpened
+            sig = (
+                4.0 * pp.alpha_amp * spikes
+                + 0.5 * alpha
+                + noise * 0.5
+            )
+        return sig.astype(jnp.float32)
+
+    noise_keys = jax.random.split(k_noise, N_CHANNELS)
+    chans = jnp.stack([channel(c, noise_keys[c]) for c in range(N_CHANNELS)], axis=1)
+    return chans  # (n_windows, C, WINDOW)
+
+
+class Recording(NamedTuple):
+    """A labeled, windowed recording: the unit the pipeline consumes."""
+
+    windows: jax.Array  # (W, C, WINDOW)
+    labels: jax.Array   # (W,) 0 = interictal, 1 = preictal/ictal
+
+
+def make_training_set(
+    key: jax.Array,
+    patient_id: int,
+    n_interictal_windows: int = 120,
+    n_preictal_windows: int = 120,
+) -> Recording:
+    """Balanced train recording following Sec. 2.6 (interictal chunks +
+    the 48-minute preictal record)."""
+    k1, k2 = jax.random.split(key)
+    inter = generate_windows(k1, jnp.asarray(patient_id), INTERICTAL, n_interictal_windows)
+    pre = generate_windows(k2, jnp.asarray(patient_id), PREICTAL, n_preictal_windows)
+    windows = jnp.concatenate([inter, pre], axis=0)
+    labels = jnp.concatenate(
+        [
+            jnp.zeros((n_interictal_windows,), jnp.int32),
+            jnp.ones((n_preictal_windows,), jnp.int32),
+        ]
+    )
+    return Recording(windows=windows, labels=labels)
+
+
+def make_test_timeline(
+    key: jax.Array,
+    patient_id: int,
+    hours_interictal: int = 2,
+    minutes_preictal: int = 48,
+) -> Recording:
+    """A chronological test stream: hours of interictal followed by the
+    preictal run-up and the seizure (the Figs. 3-10 protocol). Returns
+    8-second windows in temporal order."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    w_inter = hours_interictal * 450  # 450 8-second windows per hour
+    w_pre = minutes_preictal * 60 // 8
+    inter = generate_windows(k1, jnp.asarray(patient_id), INTERICTAL, w_inter)
+    pre = generate_windows(k2, jnp.asarray(patient_id), PREICTAL, w_pre)
+    ict = generate_windows(k3, jnp.asarray(patient_id), ICTAL, 8)
+    windows = jnp.concatenate([inter, pre, ict], axis=0)
+    labels = jnp.concatenate(
+        [
+            jnp.zeros((w_inter,), jnp.int32),
+            jnp.ones((w_pre + 8,), jnp.int32),
+        ]
+    )
+    return Recording(windows=windows, labels=labels)

@@ -1,0 +1,100 @@
+"""Multiscale PCA denoising (Bakshi 1998; paper Sec. 2.1).
+
+Input: a data matrix X (N samples x P variables). The paper's variables
+are channel-window columns of the 2048 x 180 matrix (8 minutes of 8-second
+windows x 3 channels).
+
+Algorithm:
+  1. DWT each column to ``level`` (db4 by default) -- wavelet.dwt is
+     applied along the sample axis.
+  2. At every scale (each detail D_j and the final approximation A_L),
+     run PCA across the P variables and reconstruct keeping only the
+     components selected by the Kaiser rule (eigenvalue > mean eigenvalue).
+  3. Optionally hard-threshold detail coefficients (universal threshold
+     sigma * sqrt(2 log N), sigma from the finest-scale MAD) -- Bakshi's
+     wavelet-thresholding step.
+  4. Inverse DWT; a final full-scale PCA reconstruction (Kaiser rule).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pca
+from repro.signal import wavelet
+
+
+def _pca_reconstruct(mat: jax.Array, keep) -> jax.Array:
+    """PCA across columns; keep components; reconstruct.
+
+    ``keep``: "kaiser" (eigenvalue > mean -- Bakshi's rule; content-
+    dependent) or an int (fixed count -- keeps the train/test transform
+    comparable, which matters for downstream classification; see
+    EXPERIMENTS.md ablation)."""
+    st = pca.fit(mat)
+    k = pca.kaiser_rule(st) if keep == "kaiser" else jnp.asarray(keep)
+    k = jnp.minimum(k, mat.shape[1])
+    return pca.reconstruct(st, mat, k)
+
+
+def _hard_threshold(d: jax.Array, sigma: jax.Array) -> jax.Array:
+    thr = sigma * jnp.sqrt(2.0 * jnp.log(jnp.asarray(d.shape[0], jnp.float32)))
+    return jnp.where(jnp.abs(d) > thr, d, 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("level", "wavelet_name", "threshold", "keep", "final_pca"),
+)
+def denoise(
+    x: jax.Array,
+    level: int = 5,
+    wavelet_name: str = "db4",
+    threshold: bool = False,
+    keep: int | str = 30,
+    final_pca: bool = False,
+) -> jax.Array:
+    """MSPCA-denoise X (N, P) -> (N, P).
+
+    Defaults (fixed ``keep``, no hard threshold, no final full-scale pass)
+    are the *classification-stable* variant selected by the ablation in
+    EXPERIMENTS.md: Bakshi's original Kaiser rule + universal threshold
+    (``threshold=True, keep="kaiser", final_pca=True``) denoises more
+    aggressively but makes the reconstruction content-dependent, which
+    hurts downstream train/test feature consistency.
+    """
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=0)
+    xc = x - mean
+
+    # DWT along samples: transform each column. wavelet ops act on the last
+    # axis, so work with (P, N).
+    coeffs = wavelet.dwt(xc.T, level, wavelet_name)  # list of (P, N/2^j)
+
+    # Noise scale from the finest detail (median absolute deviation).
+    d1 = coeffs[0]
+    sigma = jnp.median(jnp.abs(d1)) / 0.6745
+
+    new_coeffs = []
+    for j, c in enumerate(coeffs):
+        mat = c.T  # (n_j, P)
+        rec = _pca_reconstruct(mat, keep)
+        if threshold and j < len(coeffs) - 1:  # details only, not A_L
+            rec = _hard_threshold(rec, sigma)
+        new_coeffs.append(rec.T)
+
+    xd = wavelet.idwt(new_coeffs, wavelet_name).T  # (N, P)
+    if final_pca:  # Bakshi step 4
+        xd = _pca_reconstruct(xd, keep)
+    return xd + mean
+
+
+def snr_db(clean: jax.Array, noisy: jax.Array) -> jax.Array:
+    """Diagnostic: SNR of ``noisy`` against ``clean`` in dB."""
+    err = noisy - clean
+    return 10.0 * jnp.log10(
+        jnp.sum(clean**2) / jnp.maximum(jnp.sum(err**2), 1e-12)
+    )

@@ -1,0 +1,143 @@
+"""Discrete Wavelet Transform and Wavelet Packet Decomposition in JAX.
+
+Paper Sec. 2.2 (eqs. 2-3): one analysis level passes x through a high-pass
+and a low-pass QMF filter and downsamples by 2; DWT recurses on the
+approximation only, WPD recurses on *both* branches, yielding 2**k
+terminal coefficient sets at level k.
+
+Implementation notes (TPU adaptation, DESIGN.md Sec. 7):
+  * Periodized orthogonal transform -- the analysis operator
+    a[n] = sum_k h[k] x[(2n+k) mod N] has orthonormal rows, so synthesis
+    is exactly the transpose (scatter-add) and round-trips are exact.
+  * The decimating convolution is expressed as a gather + small matmul
+    (window matrix (N/2, L) times filter (L,)) rather than `conv`;
+    that is the layout the Pallas ``kernels/wpd`` kernel tiles for the
+    MXU, and this module is its reference implementation / fallback.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Daubechies scaling (low-pass) filters, sum = sqrt(2). Orthonormality
+# (sum_k h[k] h[k+2m] = delta_m) is asserted by the test suite.
+_DAUBECHIES: dict[str, list[float]] = {
+    "db1": [0.7071067811865476, 0.7071067811865476],
+    "db2": [
+        0.48296291314469025, 0.836516303737469,
+        0.22414386804185735, -0.12940952255092145,
+    ],
+    "db3": [
+        0.3326705529509569, 0.8068915093133388, 0.4598775021193313,
+        -0.13501102001039084, -0.08544127388224149, 0.035226291882100656,
+    ],
+    "db4": [
+        0.23037781330885523, 0.7148465705525415, 0.6308807679295904,
+        -0.02798376941698385, -0.18703481171888114, 0.030841381835986965,
+        0.032883011666982945, -0.010597401784997278,
+    ],
+}
+
+
+def filters(name: str = "db4") -> tuple[jax.Array, jax.Array]:
+    """(low-pass h, high-pass g) analysis filters. g[k] = (-1)^k h[L-1-k]."""
+    if name not in _DAUBECHIES:
+        raise ValueError(f"unknown wavelet {name!r}; have {sorted(_DAUBECHIES)}")
+    h = np.asarray(_DAUBECHIES[name], np.float32)
+    L = len(h)
+    g = np.array([(-1.0) ** k * h[L - 1 - k] for k in range(L)], np.float32)
+    return jnp.asarray(h), jnp.asarray(g)
+
+
+def _window_indices(n: int, taps: int) -> jax.Array:
+    """(n//2, taps) gather indices: row i reads x[(2i + k) mod n]."""
+    base = 2 * jnp.arange(n // 2, dtype=jnp.int32)[:, None]
+    offs = jnp.arange(taps, dtype=jnp.int32)[None, :]
+    return (base + offs) % n
+
+
+def analysis_step(x: jax.Array, wavelet: str = "db4") -> tuple[jax.Array, jax.Array]:
+    """One level (eqs. 2-3): x (..., N) -> (approx (..., N/2), detail (..., N/2))."""
+    h, g = filters(wavelet)
+    n = x.shape[-1]
+    assert n % 2 == 0, "signal length must be even"
+    idx = _window_indices(n, h.shape[0])
+    xw = x[..., idx]  # (..., N/2, L)
+    return xw @ h, xw @ g
+
+
+def synthesis_step(a: jax.Array, d: jax.Array, wavelet: str = "db4") -> jax.Array:
+    """Inverse of ``analysis_step`` (transpose of the orthonormal operator)."""
+    h, g = filters(wavelet)
+    n = 2 * a.shape[-1]
+    idx = _window_indices(n, h.shape[0])  # (N/2, L)
+    contrib = a[..., :, None] * h + d[..., :, None] * g  # (..., N/2, L)
+    out = jnp.zeros(a.shape[:-1] + (n,), a.dtype)
+    return out.at[..., idx].add(contrib)
+
+
+def dwt(x: jax.Array, level: int, wavelet: str = "db4") -> list[jax.Array]:
+    """Multi-level DWT: returns [D1, D2, ..., Dlevel, Alevel]."""
+    coeffs = []
+    cur = x
+    for _ in range(level):
+        cur, d = analysis_step(cur, wavelet)
+        coeffs.append(d)
+    coeffs.append(cur)
+    return coeffs
+
+
+def idwt(coeffs: list[jax.Array], wavelet: str = "db4") -> jax.Array:
+    """Inverse of ``dwt`` ([D1..Dlevel, Alevel] -> x)."""
+    cur = coeffs[-1]
+    for d in reversed(coeffs[:-1]):
+        cur = synthesis_step(cur, d, wavelet)
+    return cur
+
+
+@functools.partial(jax.jit, static_argnames=("level", "wavelet", "use_kernel"))
+def wpd(x: jax.Array, level: int, wavelet: str = "db4", use_kernel: bool = False) -> jax.Array:
+    """Wavelet Packet Decomposition.
+
+    x (..., N) -> (..., 2**level, N // 2**level) terminal coefficient sets
+    in natural (Paley) order. Each level applies ``analysis_step`` to every
+    current node (low and high branches alike -- the WPD/DWT distinction of
+    Sec. 2.2).
+
+    use_kernel=True routes the per-level filterbank through the Pallas
+    ``kernels/wpd`` kernel (TPU target; interpret-mode on CPU).
+    """
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    if n % (2**level) != 0:
+        raise ValueError(f"signal length {n} not divisible by 2**{level}")
+    nodes = x[..., None, :]  # (..., 1, N)
+    for _ in range(level):
+        if use_kernel:
+            from repro.kernels.wpd import ops as wpd_ops
+
+            a, d = wpd_ops.wpd_level(
+                nodes.reshape((-1, nodes.shape[-1])), wavelet=wavelet
+            )
+            a = a.reshape(nodes.shape[:-1] + (-1,))
+            d = d.reshape(nodes.shape[:-1] + (-1,))
+        else:
+            a, d = analysis_step(nodes, wavelet)
+        # Interleave so node 2i is the low branch of node i, 2i+1 the high.
+        nodes = jnp.stack([a, d], axis=-2).reshape(
+            lead + (a.shape[-2] * 2, a.shape[-1])
+        )
+    return nodes
+
+
+def wpd_reconstruct(nodes: jax.Array, wavelet: str = "db4") -> jax.Array:
+    """Inverse WPD: (..., 2**level, M) -> (..., 2**level * M)."""
+    while nodes.shape[-2] > 1:
+        pairs = nodes.reshape(nodes.shape[:-2] + (nodes.shape[-2] // 2, 2, nodes.shape[-1]))
+        merged = synthesis_step(pairs[..., 0, :], pairs[..., 1, :], wavelet)
+        nodes = merged
+    return nodes[..., 0, :]

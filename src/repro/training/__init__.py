@@ -1,0 +1,9 @@
+from repro.training.trainer import (
+    TrainState,
+    make_ensemble_train_step,
+    make_train_step,
+    train_state_shapes,
+)
+
+__all__ = ["TrainState", "make_train_step", "make_ensemble_train_step",
+           "train_state_shapes"]

@@ -1,0 +1,124 @@
+"""Training steps.
+
+``make_train_step``          -- standard data-parallel SGD step (grads
+                                all-reduced implicitly by GSPMD over the
+                                batch axes).
+``make_ensemble_train_step`` -- the paper's MapReduce schedule (T1 in
+                                DESIGN.md) generalized to gradient models:
+                                members ride the mesh ``data`` axis, see
+                                disjoint batch shards, and deliberately DO
+                                NOT sync gradients (bagging); predictions
+                                are vote-reduced at eval by
+                                ``core.ensemble.ensemble_vote``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWState, Optimizer, apply_updates, opt_shapes
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def train_state_shapes(model: Model, optimizer: Optimizer) -> TrainState:
+    ps = model.param_shapes()
+    return TrainState(ps, opt_shapes(ps))
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    microbatches: int | None = None):
+    """(state, batch) -> (state, metrics).  Pure; jit/lower at call site.
+
+    ``microbatches=k`` splits the global batch into k sequential
+    micro-steps with f32 gradient accumulation (activation memory /k at
+    the cost of k layer-weight re-streams -- the standard big-model
+    trade; see EXPERIMENTS.md §Perf)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+
+    def train_step(state: TrainState, batch: Any):
+        if microbatches and microbatches > 1:
+            k = microbatches
+
+            def split(t):
+                return t.reshape((k, t.shape[0] // k) + t.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def body(acc, mb):
+                gacc, lacc = acc
+                (loss, metrics), g = grads_of(state.params, mb)
+                gacc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + loss), metrics
+
+            (gsum, lsum), ms = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            loss = lsum / k
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), ms)
+        else:
+            (loss, metrics), grads = grads_of(state.params, batch)
+        updates, opt = optimizer.update(grads, state.opt, state.params)
+        params = apply_updates(state.params, updates)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def make_ensemble_train_step(model: Model, optimizer: Optimizer,
+                             mesh: Mesh, n_members: int):
+    """Paper technique (T1): each of ``n_members`` ensemble members trains
+    on its own shard of the global batch with NO gradient sync across the
+    member axis.  Implemented as a vmapped member axis laid out over the
+    mesh ``data`` axis (params carry a leading member dim sharded P("data")).
+
+    Returns (ensemble_state, batch) -> (ensemble_state, metrics); member
+    params/opt have leading dim ``n_members``.
+    """
+    step = make_train_step(model, optimizer)
+
+    def ensemble_step(states: TrainState, batch: Any):
+        # batch leading axis: (n_members * per_member, ...) -> member-major
+        def split(t):
+            return t.reshape((n_members, t.shape[0] // n_members)
+                             + t.shape[1:])
+        member_batches = jax.tree.map(split, batch)
+        new_states, metrics = jax.vmap(step)(states, member_batches)
+        return new_states, metrics
+
+    return ensemble_step
+
+
+def ensemble_init(model: Model, optimizer: Optimizer, rng: jax.Array,
+                  n_members: int) -> TrainState:
+    keys = jax.random.split(rng, n_members)
+    params = jax.vmap(model.init)(keys)
+    opt = jax.vmap(optimizer.init)(params)
+    return TrainState(params, opt)
+
+
+def ensemble_member_pspecs(param_pspecs_tree: Any) -> Any:
+    """Member axis rides 'data' (the paper's map-over-splits); per-member
+    tensor sharding keeps only the 'model' axis components."""
+
+    def shift(spec: P) -> P:
+        # drop 'data' from inner dims (member axis owns it), prepend member
+        inner = tuple(None if ax == "data" else ax for ax in spec)
+        return P("data", *inner)
+
+    return jax.tree.map(shift, param_pspecs_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,37 @@
+"""Bonus architectures (beyond the assigned 10): reduced smoke + one
+train step, same contract as the assigned zoo."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import BONUS_ARCH_NAMES, get_config
+from repro.configs.base import InputShape
+from repro.data.synthetic import make_batch
+from repro.models import build
+from repro.optim import AdamWConfig, adamw
+from repro.training import TrainState, make_train_step
+
+
+@pytest.mark.parametrize("arch", BONUS_ARCH_NAMES)
+def test_bonus_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    opt = adamw(AdamWConfig(lr=1e-3))
+    params = model.init(jax.random.PRNGKey(0))
+    state = TrainState(params, opt.init(params))
+    step = jax.jit(make_train_step(model, opt))
+    batch = make_batch(cfg, InputShape("s", 64, 2, "train"), seed=1)
+    state2, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+
+@pytest.mark.parametrize("arch", BONUS_ARCH_NAMES)
+def test_bonus_full_dims(arch):
+    cfg = get_config(arch)
+    if arch == "llama3-8b":
+        assert (cfg.n_layers, cfg.d_model, cfg.d_ff) == (32, 4096, 14336)
+    if arch == "mixtral-8x7b":
+        assert (cfg.n_experts, cfg.experts_per_token) == (8, 2)

@@ -1,0 +1,60 @@
+"""Checkpoint store: roundtrip, atomicity, latest-step discovery."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.optim import AdamWConfig, adamw
+from repro.training import TrainState
+
+
+def _state():
+    params = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+              "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    opt = adamw(AdamWConfig())
+    return TrainState(params, opt.init(params))
+
+
+def test_roundtrip(tmp_path):
+    state = _state()
+    path = ckpt.save(str(tmp_path), 7, state)
+    assert os.path.isdir(path)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = ckpt.restore(str(tmp_path), 7, like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step(tmp_path):
+    assert ckpt.latest_step(str(tmp_path)) is None
+    state = _state()
+    ckpt.save(str(tmp_path), 3, state)
+    ckpt.save(str(tmp_path), 11, state)
+    assert ckpt.latest_step(str(tmp_path)) == 11
+
+
+def test_overwrite_same_step(tmp_path):
+    state = _state()
+    ckpt.save(str(tmp_path), 5, state)
+    state2 = jax.tree.map(lambda x: x * 0, state)
+    ckpt.save(str(tmp_path), 5, state2)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+    restored = ckpt.restore(str(tmp_path), 5, like)
+    assert float(jnp.sum(jnp.abs(restored.params["a"]))) == 0.0
+
+
+def test_shape_mismatch_raises(tmp_path):
+    state = _state()
+    ckpt.save(str(tmp_path), 1, state)
+    bad = jax.tree.map(lambda x: jax.ShapeDtypeStruct((9,), x.dtype), state)
+    with pytest.raises(AssertionError):
+        ckpt.restore(str(tmp_path), 1, bad)

@@ -1,0 +1,236 @@
+"""Unit tests for repro.core: PCA, decision trees, rotation forest,
+mapreduce, distributed ensemble."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decision_tree as dt
+from repro.core import ensemble, mapreduce as mr, pca
+from repro.core import rotation_forest as rf
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x0 = jax.random.normal(k1, (200, 12)) + 2.0
+    x1 = jax.random.normal(k2, (200, 12)) - 2.0
+    x = jnp.concatenate([x0, x1])
+    y = jnp.concatenate(
+        [jnp.zeros(200, jnp.int32), jnp.ones(200, jnp.int32)]
+    )
+    perm = jax.random.permutation(k3, 400)
+    return x[perm], y[perm]
+
+
+# ---------------------------------------------------------------- PCA ----
+
+class TestPCA:
+    def test_components_orthonormal(self, blobs):
+        x, _ = blobs
+        st = pca.fit(x)
+        eye = st.components @ st.components.T
+        np.testing.assert_allclose(np.asarray(eye), np.eye(12), atol=1e-5)
+
+    def test_variances_sorted_nonnegative(self, blobs):
+        x, _ = blobs
+        st = pca.fit(x)
+        v = np.asarray(st.variances)
+        assert (v >= 0).all()
+        assert (np.diff(v) <= 1e-5).all()
+
+    def test_full_reconstruction_exact(self, blobs):
+        x, _ = blobs
+        st = pca.fit(x)
+        xr = pca.inverse_transform(st, pca.transform(st, x))
+        np.testing.assert_allclose(np.asarray(xr), np.asarray(x), atol=1e-4)
+
+    def test_reconstruct_masks_components(self, blobs):
+        x, _ = blobs
+        st = pca.fit(x)
+        r1 = pca.reconstruct(st, x, 1)
+        rall = pca.reconstruct(st, x, 12)
+        err1 = float(jnp.mean((r1 - x) ** 2))
+        errall = float(jnp.mean((rall - x) ** 2))
+        assert errall < 1e-6
+        assert err1 > errall
+
+    def test_variance_rules(self, blobs):
+        x, _ = blobs
+        st = pca.fit(x)
+        k95 = int(pca.n_components_for_variance(st, 0.95))
+        assert 1 <= k95 <= 12
+        kk = int(pca.kaiser_rule(st))
+        assert 1 <= kk <= 12
+        # blobs have one dominant direction (the class separation)
+        assert kk <= 3
+
+
+# ------------------------------------------------------- decision tree ----
+
+class TestDecisionTree:
+    def test_fits_separable(self, blobs):
+        x, y = blobs
+        tree = dt.fit(x, y, depth=4, n_classes=2, n_bins=16)
+        acc = float(jnp.mean(dt.predict(tree, x) == y))
+        assert acc > 0.98
+
+    def test_probs_normalized(self, blobs):
+        x, y = blobs
+        tree = dt.fit(x, y, depth=4, n_classes=2, n_bins=16)
+        p = dt.predict_proba(tree, x)
+        np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, atol=1e-4)
+        assert float(p.min()) >= 0.0
+
+    def test_weights_mask_samples(self, blobs):
+        x, y = blobs
+        # Flip half the labels but zero their weight: the tree must ignore them.
+        n = x.shape[0]
+        y_bad = y.at[: n // 2].set(1 - y[: n // 2])
+        w = jnp.ones((n,)).at[: n // 2].set(0.0)
+        tree = dt.fit(x, y_bad, w, depth=4, n_classes=2, n_bins=16)
+        acc = float(jnp.mean(dt.predict(tree, x)[n // 2 :] == y[n // 2 :]))
+        assert acc > 0.95
+
+    def test_pure_node_stops(self):
+        x = jnp.ones((32, 3))
+        y = jnp.zeros((32,), jnp.int32)
+        tree = dt.fit(x, y, depth=3, n_classes=2, n_bins=8)
+        # Root is pure: no split anywhere.
+        assert int(tree.split_feature[1]) == -1
+        p = dt.predict_proba(tree, x)
+        assert float(p[:, 0].min()) > 0.9
+
+    def test_depth_one_is_stump(self, blobs):
+        x, y = blobs
+        tree = dt.fit(x, y, depth=1, n_classes=2, n_bins=16)
+        assert tree.leaf_probs.shape == (2, 2)
+        acc = float(jnp.mean(dt.predict(tree, x) == y))
+        assert acc > 0.9  # blobs are linearly separable on any axis
+
+
+# ------------------------------------------------------ rotation forest ----
+
+class TestRotationForest:
+    def test_fit_predict(self, blobs):
+        x, y = blobs
+        cfg = rf.RotationForestConfig(
+            n_trees=8, n_subsets=3, depth=4, n_classes=2, n_bins=16
+        )
+        params = rf.fit(jax.random.PRNGKey(0), x, y, cfg)
+        assert float(rf.accuracy(params, x, y)) > 0.97
+
+    def test_rotation_is_orthogonal(self, blobs):
+        x, y = blobs
+        cfg = rf.RotationForestConfig(
+            n_trees=4, n_subsets=3, depth=3, n_classes=2, n_bins=16
+        )
+        params = rf.fit(jax.random.PRNGKey(0), x, y, cfg)
+        for t in range(4):
+            r = np.asarray(params.rotation[t])
+            np.testing.assert_allclose(r @ r.T, np.eye(r.shape[0]), atol=1e-4)
+
+    def test_feature_padding(self):
+        # 10 features, 3 subsets -> pads to 12 internally.
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, (100, 10))
+        y = (x[:, 0] > 0).astype(jnp.int32)
+        cfg = rf.RotationForestConfig(
+            n_trees=4, n_subsets=3, depth=3, n_classes=2, n_bins=16
+        )
+        params = rf.fit(key, x, y, cfg)
+        assert params.rotation.shape == (4, 12, 12)
+        assert float(rf.accuracy(params, x, y)) > 0.9
+
+    def test_merge_unions_forests(self, blobs):
+        x, y = blobs
+        cfg = rf.RotationForestConfig(
+            n_trees=3, n_subsets=3, depth=3, n_classes=2, n_bins=16
+        )
+        a = rf.fit(jax.random.PRNGKey(0), x, y, cfg)
+        b = rf.fit(jax.random.PRNGKey(1), x, y, cfg)
+        m = rf.merge(a, b)
+        assert m.rotation.shape[0] == 6
+        assert float(rf.accuracy(m, x, y)) > 0.95
+
+    def test_ensemble_beats_single_tree_on_noise(self):
+        # Noisy labels: ensemble averaging should not be worse than a stump.
+        key = jax.random.PRNGKey(3)
+        k1, k2 = jax.random.split(key)
+        x = jax.random.normal(k1, (300, 9))
+        y = (x[:, :3].sum(-1) > 0).astype(jnp.int32)
+        flip = jax.random.uniform(k2, (300,)) < 0.15
+        y_noisy = jnp.where(flip, 1 - y, y)
+        cfg = rf.RotationForestConfig(
+            n_trees=16, n_subsets=3, depth=4, n_classes=2, n_bins=16
+        )
+        params = rf.fit(key, x, y_noisy, cfg)
+        acc_clean = float(jnp.mean(rf.predict(params, x) == y))
+        assert acc_clean > 0.85
+
+
+# ------------------------------------------------------------ mapreduce ----
+
+class TestMapReduce:
+    def test_local_equals_mesh(self):
+        x = jnp.arange(128.0).reshape(64, 2)
+        job = mr.MapReduce(lambda s: jnp.sum(s, axis=0), mr.reduce_sum)
+        local = job.run_local(4, x)
+        mesh = jax.make_mesh((1,), ("data",))
+        on_mesh = job.run(mesh, x)
+        np.testing.assert_allclose(np.asarray(local), np.asarray(on_mesh), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(local), np.asarray(x.sum(0)), rtol=1e-6)
+
+    def test_reduce_concat_preserves_rows(self):
+        x = jnp.arange(32.0).reshape(32, 1)
+        job = mr.MapReduce(lambda s: s * 2, mr.reduce_concat)
+        out = job.run_local(8, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 2)
+
+    def test_reduce_mean_max(self):
+        x = jnp.arange(16.0).reshape(16, 1)
+        mean_job = mr.MapReduce(lambda s: jnp.mean(s), mr.reduce_mean)
+        max_job = mr.MapReduce(lambda s: jnp.max(s), mr.reduce_max)
+        assert float(mean_job.run_local(4, x)) == pytest.approx(7.5)
+        assert float(max_job.run_local(4, x)) == pytest.approx(15.0)
+
+    def test_replicated_inputs(self):
+        x = jnp.ones((8, 2))
+        scale = jnp.asarray(3.0)
+        job = mr.MapReduce(lambda s, k: jnp.sum(s * k), mr.reduce_sum)
+        out = job.run_local(2, x, replicated_inputs=(scale,))
+        assert float(out) == pytest.approx(48.0)
+
+
+# ------------------------------------------------------------- ensemble ----
+
+class TestDistributedEnsemble:
+    def test_bagged_forest_local(self, blobs):
+        x, y = blobs
+        cfg = rf.RotationForestConfig(
+            n_trees=2, n_subsets=3, depth=3, n_classes=2, n_bins=16
+        )
+        ens = ensemble.DistributedEnsemble(
+            fit_fn=lambda k, xs, ys: rf.fit(k, xs, ys, cfg),
+            predict_fn=rf.predict_proba,
+        )
+        members = ens.fit_local(4, jax.random.PRNGKey(0), x, y)
+        # 4 members x 2 trees each
+        assert members.rotation.shape[0] == 4
+        acc = float(jnp.mean(ens.predict(members, x) == y))
+        assert acc > 0.95
+
+    def test_vote_probabilities_normalized(self, blobs):
+        x, y = blobs
+        cfg = rf.RotationForestConfig(
+            n_trees=2, n_subsets=3, depth=3, n_classes=2, n_bins=16
+        )
+        ens = ensemble.DistributedEnsemble(
+            fit_fn=lambda k, xs, ys: rf.fit(k, xs, ys, cfg),
+            predict_fn=rf.predict_proba,
+        )
+        members = ens.fit_local(4, jax.random.PRNGKey(0), x, y)
+        p = ens.predict_proba(members, x)
+        np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, atol=1e-4)

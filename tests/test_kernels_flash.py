@@ -1,0 +1,63 @@
+"""Flash-attention kernel: shape/dtype sweep vs the jnp oracle
+(interpret mode on CPU, per the kernel-validation contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops
+from repro.kernels.flash_attention import ref
+
+
+SHAPES = [
+    # (batch, seq, q_heads, kv_heads, head_dim, block)
+    (2, 128, 4, 4, 64, 64),       # MHA
+    (2, 256, 4, 2, 64, 128),      # GQA
+    (1, 256, 8, 1, 128, 128),     # MQA (paligemma-style)
+    (1, 512, 2, 2, 128, 256),     # bigger blocks
+    (3, 128, 6, 2, 32, 64),       # odd head count (starcoder-style ratios)
+]
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,blk", SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_vs_oracle(b, s, h, kv, hd, blk, causal, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * s + h), 3)
+    q = jax.random.normal(k1, (b, s, h, hd), dtype)
+    k = jax.random.normal(k2, (b, s, kv, hd), dtype)
+    v = jax.random.normal(k3, (b, s, kv, hd), dtype)
+    out_kernel = ops.flash_attention(q, k, v, causal=causal, block_q=blk,
+                                     block_k=blk, use_pallas=True)
+    out_ref = ops.flash_attention(q, k, v, causal=causal, use_pallas=False)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out_kernel, np.float32), np.asarray(out_ref, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_softmax_rows_normalized():
+    """Property: with v = identity-ish one-hot values, output rows are convex
+    combinations -> bounded by min/max of v."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    q = jax.random.normal(k1, (1, 128, 2, 32), jnp.float32)
+    k = jax.random.normal(k2, (1, 128, 2, 32), jnp.float32)
+    v = jnp.ones((1, 128, 2, 32), jnp.float32) * 3.5
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                              use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out), 3.5, atol=1e-4)
+
+
+def test_oracle_matches_naive_formula():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(k1, (2, 64, 16), jnp.float32)
+    k = jax.random.normal(k2, (2, 64, 16), jnp.float32)
+    v = jax.random.normal(k3, (2, 64, 16), jnp.float32)
+    out = ref.attention(q, k, v, causal=False)
+    w = jax.nn.softmax(jnp.einsum("bqd,bkd->bqk", q, k) / 4.0, axis=-1)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.einsum("bqk,bkd->bqd", w, v)),
+                               atol=1e-5)

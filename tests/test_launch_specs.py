@@ -1,0 +1,74 @@
+"""launch.dryrun plumbing on a host-sized mesh: input_specs must produce
+shard-consistent ShapeDtypeStructs for every kind, and model_flops /
+auto_microbatches must be sane.  (The 512-device meshes are exercised by
+the dry-run itself; these tests guard the plumbing in CI.)"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+# NOTE: repro.launch.dryrun sets XLA_FLAGS at import; importing it in the
+# test process is safe ONLY because jax is already initialized with 1 CPU
+# device (the flag then has no effect).
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.dryrun import auto_microbatches, input_specs, model_flops
+from repro.launch.mesh import make_host_mesh
+
+
+def test_input_specs_train_shapes():
+    mesh = make_host_mesh(1, 1)
+    model, (state, batch) = input_specs("qwen3-0.6b", "train_4k", mesh)
+    assert batch["tokens"].shape == (256, 4096)
+    assert batch["tokens"].dtype == jnp.int32
+    # optimizer state mirrors params
+    p_leaves = jax.tree.leaves(state.params)
+    m_leaves = jax.tree.leaves(state.opt.m)
+    assert len(p_leaves) == len(m_leaves)
+    for p, m in zip(p_leaves, m_leaves):
+        assert p.shape == m.shape
+
+
+def test_input_specs_decode_has_cache():
+    mesh = make_host_mesh(1, 1)
+    model, (params, cache, batch) = input_specs("xlstm-1.3b", "decode_32k",
+                                                mesh)
+    assert batch["tokens"].shape == (128, 1)
+    assert cache["pos"].dtype == jnp.int32
+
+
+def test_input_specs_vlm_splits_patches():
+    mesh = make_host_mesh(1, 1)
+    model, (params, batch) = input_specs("paligemma-3b", "prefill_32k", mesh)
+    cfg = get_config("paligemma-3b")
+    assert batch["patches"].shape[1] == cfg.n_patches
+    assert batch["tokens"].shape[1] == 32768 - cfg.n_patches
+
+
+def test_model_flops_scaling():
+    cfg = get_config("command-r-35b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"], "train")
+    pf = model_flops(cfg, INPUT_SHAPES["prefill_32k"], "prefill")
+    dc = model_flops(cfg, INPUT_SHAPES["decode_32k"], "decode")
+    # 6ND vs 2ND and token counts
+    assert tr / pf == pytest.approx(3.0, rel=0.01)
+    assert pf / dc == pytest.approx(32 * 32768 / 128, rel=0.01)
+    # MoE uses ACTIVE params
+    moe = get_config("qwen3-moe-30b-a3b")
+    dense_equiv = model_flops(moe, INPUT_SHAPES["train_4k"], "train")
+    from repro.models import build
+    assert dense_equiv < 6.0 * build(moe).param_count() * 256 * 4096
+
+
+def test_auto_microbatches_monotone():
+    mesh = make_host_mesh(1, 1)
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    small = get_config("qwen3-0.6b")
+    big = get_config("command-r-35b")
+    s = auto_microbatches(small, INPUT_SHAPES["train_4k"], FakeMesh())
+    b = auto_microbatches(big, INPUT_SHAPES["train_4k"], FakeMesh())
+    assert b >= s >= 1

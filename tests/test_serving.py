@@ -1,0 +1,59 @@
+"""Serving engine: batched greedy generation matches step-by-step
+teacher-forced argmax decoding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serving import ServeEngine
+
+
+def _tiny_model(arch="qwen3-0.6b"):
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_engine_matches_teacher_forced_greedy():
+    cfg, model, params = _tiny_model()
+    engine = ServeEngine(model, params, max_batch=2, max_seq=64)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=6).astype(np.int32),
+               rng.integers(2, cfg.vocab_size, size=6).astype(np.int32)]
+    outs = engine.generate(prompts, max_new=5)
+
+    # reference: repeatedly run the full forward and take argmax
+    for i, prompt in enumerate(prompts):
+        toks = list(prompt)
+        for _ in range(5):
+            logits, _ = model.forward(
+                params, {"tokens": jnp.asarray([toks], jnp.int32)},
+                chunked_attn=False)
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        ref = toks[len(prompt):]
+        got = outs[i].tolist()[:len(ref)]
+        assert got == ref, (i, got, ref)
+
+
+def test_engine_eos_stops_early():
+    cfg, model, params = _tiny_model("xlstm-1.3b")
+    engine = ServeEngine(model, params, max_batch=1, max_seq=32, eos_id=-1)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(2, cfg.vocab_size, size=4).astype(np.int32)]
+    outs = engine.generate(prompts, max_new=4)
+    assert len(outs[0]) == 4  # eos never fires with id -1
+
+
+def test_ragged_batch_left_padding():
+    cfg, model, params = _tiny_model("xlstm-1.3b")
+    engine = ServeEngine(model, params, max_batch=3, max_seq=32)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (3, 7, 5)]
+    outs = engine.generate(prompts, max_new=3)
+    assert len(outs) == 3 and all(len(o) == 3 for o in outs)

@@ -1,0 +1,94 @@
+"""Training substrate: optimizer behaviour, microbatch-accumulation
+equivalence, ensemble (paper schedule) divergence, schedules."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.data.synthetic import make_batch
+from repro.models import build
+from repro.optim import AdamWConfig, adamw, cosine_warmup, linear_warmup
+from repro.optim.adamw import global_norm
+from repro.training import TrainState, make_train_step
+from repro.training.trainer import ensemble_init, make_ensemble_train_step
+
+
+def _setup(arch="qwen3-0.6b", lr=1e-3):
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    opt = adamw(AdamWConfig(lr=lr))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, opt, TrainState(params, opt.init(params))
+
+
+def test_adamw_minimizes_quadratic():
+    opt = adamw(AdamWConfig(lr=0.1, weight_decay=0.0))
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        updates, state = opt.update(grads, state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clipping_bounds_update():
+    cfg_o = AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    opt = adamw(cfg_o)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    huge = {"w": jnp.full(4, 1e6)}
+    updates, state = opt.update(huge, state, params)
+    # post-clip grad norm 1 -> adam update magnitude <= lr / (1-b1) margin
+    assert float(global_norm(updates)) < 25.0
+
+
+def test_schedules():
+    cos = cosine_warmup(1.0, 10, 100)
+    lin = linear_warmup(1.0, 10, 100)
+    assert float(cos(jnp.asarray(0))) == 0.0
+    assert abs(float(cos(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(cos(jnp.asarray(100))) <= 0.11
+    assert float(lin(jnp.asarray(5))) == 0.5
+
+
+def test_microbatch_equivalence():
+    """mb=1 vs mb=4: same loss and (numerically) same updated params --
+    gradient accumulation must not change semantics."""
+    cfg, model, opt, state = _setup()
+    batch = make_batch(cfg, InputShape("t", 32, 8, "train"), seed=2)
+    s1, m1 = jax.jit(make_train_step(model, opt))(state, batch)
+    s4, m4 = jax.jit(make_train_step(model, opt, microbatches=4))(
+        state, batch)
+    # microbatch losses are per-microbatch means; compare their mean
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-3
+    diff = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), s1.params, s4.params)))
+    assert diff < 1e-3
+
+
+def test_ensemble_members_diverge_and_vote():
+    """Paper technique T1: members see disjoint shards -> diverge (no grad
+    sync); vote-reduced predictions still well-formed."""
+    cfg, model, opt, _ = _setup("xlstm-1.3b")
+    n = 2
+    mesh = jax.make_mesh((1,), ("data",))
+    states = ensemble_init(model, opt, jax.random.PRNGKey(1), n)
+    step = jax.jit(make_ensemble_train_step(model, opt, mesh, n))
+    batch = make_batch(cfg, InputShape("t", 32, 4, "train"), seed=5)
+    states2, metrics = step(states, batch)
+    assert metrics["loss"].shape == (n,)
+    # members started different and moved differently
+    p0 = jax.tree.leaves(states2.params)[3]
+    assert float(jnp.max(jnp.abs(p0[0] - p0[1]))) > 0
+    # vote: mean of member probabilities is a distribution
+    eval_batch = make_batch(cfg, InputShape("e", 32, 2, "prefill"), seed=6)
+    logits = jax.vmap(lambda p: model.forward(p, eval_batch)[0])(
+        states2.params)
+    probs = jnp.mean(jax.nn.softmax(logits, -1), axis=0)
+    np.testing.assert_allclose(np.asarray(jnp.sum(probs, -1)), 1.0,
+                               atol=1e-3)
