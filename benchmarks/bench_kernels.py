@@ -9,41 +9,72 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Rows, time_fn
+from repro.core import rotation_forest as rf
 from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.forest import ops as forest_ops
 from repro.kernels.gram import ops as gram_ops
 from repro.kernels.wpd import ops as wpd_ops
 
 
-def run(rows: Rows) -> None:
+def run(rows: Rows, smoke: bool = False) -> None:
     key = jax.random.PRNGKey(0)
+    iters = 1 if smoke else 3
 
     # WPD analysis level (paper's hot loop): 8-min matrix (180 rows x 2048)
-    x = jax.random.normal(key, (180, 2048), jnp.float32)
-    t = time_fn(lambda: wpd_ops.wpd_level(x, use_pallas=False))
-    rows.add("kernels/wpd_level/ref_180x2048", t, "db4, one level")
+    b = 30 if smoke else 180
+    x = jax.random.normal(key, (b, 2048), jnp.float32)
+    t = time_fn(lambda: wpd_ops.wpd_level(x, use_pallas=False), iters=iters)
+    rows.add(f"kernels/wpd_level/ref_{b}x2048", t, "db4, one level")
     a_ref, d_ref = wpd_ops.wpd_level(x, use_pallas=False)
     a_k, d_k = wpd_ops.wpd_level(x, use_pallas=True, block_b=64)
     err = float(jnp.max(jnp.abs(a_ref - a_k)) + jnp.max(jnp.abs(d_ref - d_k)))
     rows.add("kernels/wpd_level/interpret_err", err, "pallas vs ref")
 
+    # Batched rotation-forest traversal (the seizure-service hot path)
+    n, f = (256, 30) if smoke else (2048, 288)
+    cfg = rf.RotationForestConfig(
+        n_trees=4 if smoke else 10, n_subsets=3, depth=4 if smoke else 6,
+        n_classes=2, n_bins=16,
+    )
+    kf, kx = jax.random.split(key)
+    xf = jax.random.normal(kx, (n, f), jnp.float32)
+    y = (xf[:, 0] > 0).astype(jnp.int32)
+    params = rf.fit(kf, xf, y, cfg)
+    packed = rf.pack(params)
+    t = time_fn(
+        lambda: forest_ops.forest_predict_proba(packed, xf, use_pallas=False),
+        iters=iters,
+    )
+    rows.add(f"kernels/forest/ref_{n}x{f}_t{cfg.n_trees}", t,
+             f"fused traversal, depth {cfg.depth}")
+    p_ref = forest_ops.forest_predict_proba(packed, xf, use_pallas=False)
+    p_k = forest_ops.forest_predict_proba(
+        packed, xf, use_pallas=True, block_b=128
+    )
+    rows.add("kernels/forest/interpret_err",
+             float(jnp.max(jnp.abs(p_ref - p_k))), "pallas vs ref (exact)")
+
     # Gram (X^T X for MSPCA / rotation PCA)
-    x = jax.random.normal(key, (2048, 180), jnp.float32)
-    t = time_fn(lambda: gram_ops.gram(x, use_pallas=False))
-    rows.add("kernels/gram/ref_2048x180", t, "")
+    m = 256 if smoke else 2048
+    x = jax.random.normal(key, (m, 180), jnp.float32)
+    t = time_fn(lambda: gram_ops.gram(x, use_pallas=False), iters=iters)
+    rows.add(f"kernels/gram/ref_{m}x180", t, "")
     g_ref = gram_ops.gram(x, use_pallas=False)
     g_k = gram_ops.gram(x, use_pallas=True)
     rows.add("kernels/gram/interpret_err",
              float(jnp.max(jnp.abs(g_ref - g_k))), "pallas vs ref")
 
     # Flash attention (prefill hot spot of the model zoo)
-    q = jax.random.normal(key, (1, 1024, 4, 64), jnp.bfloat16)
-    k = jax.random.normal(key, (1, 1024, 2, 64), jnp.bfloat16)
-    v = jax.random.normal(key, (1, 1024, 2, 64), jnp.bfloat16)
-    t = time_fn(lambda: fa_ops.flash_attention(q, k, v, use_pallas=False))
-    rows.add("kernels/flash_attention/ref_1k_gqa", t, "S=1024 H=4 KV=2")
+    s = 256 if smoke else 1024
+    q = jax.random.normal(key, (1, s, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(key, (1, s, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(key, (1, s, 2, 64), jnp.bfloat16)
+    t = time_fn(lambda: fa_ops.flash_attention(q, k, v, use_pallas=False),
+                iters=iters)
+    rows.add(f"kernels/flash_attention/ref_{s}_gqa", t, f"S={s} H=4 KV=2")
     o_ref = fa_ops.flash_attention(q, k, v, use_pallas=False)
     o_k = fa_ops.flash_attention(q, k, v, use_pallas=True,
-                                 block_q=256, block_k=256)
+                                 block_q=min(256, s), block_k=min(256, s))
     rows.add("kernels/flash_attention/interpret_err",
              float(jnp.max(jnp.abs(o_ref.astype(jnp.float32)
                                    - o_k.astype(jnp.float32)))),

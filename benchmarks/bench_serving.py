@@ -1,37 +1,147 @@
-"""Serving throughput: tokens/s of the batched decode engine (reduced
-configs on CPU -- the relative batch scaling is the signal; absolute TPU
-rates come from the decode rooflines)."""
+"""Serving throughput.
+
+Two workloads:
+
+  * ``lm``      -- tokens/s of the batched decode engine (reduced configs
+    on CPU; the relative batch scaling is the signal, absolute TPU rates
+    come from the decode rooflines).
+  * ``seizure`` -- EEG windows/s of the fused seizure-scoring service
+    (``serving.seizure_service``) vs two unfused baselines on the same
+    synthetic chunks and fitted forest: per-chunk ``signal.pipeline``
+    stage dispatches with (a) the per-tree Python forest loop
+    (``rotation_forest.predict_proba_per_tree``) and (b) the vmapped
+    per-tree traversal (the pre-fusion ``predict_proba``). The
+    fused/vmapped ratio is the honest headline; the per-tree row bounds
+    the dispatch-overhead worst case.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json F]
+"""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Rows
+from benchmarks.common import Rows, time_fn
 from repro.configs import get_config
+from repro.core import decision_tree as dt
+from repro.core import rotation_forest as rf
 from repro.models import build
-from repro.serving import ServeEngine
+from repro.serving import SeizureScoringService, ServeEngine
+from repro.signal import eeg_data, features, pipeline
 
 
-def run(rows: Rows, arch: str = "qwen3-0.6b") -> None:
+def run_lm(rows: Rows, arch: str = "qwen3-0.6b", smoke: bool = False) -> None:
     cfg = get_config(arch).reduced()
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    for batch in (1, 4):
+    for batch in (1,) if smoke else (1, 4):
         engine = ServeEngine(model, params, max_batch=batch, max_seq=96)
         prompts = [rng.integers(2, cfg.vocab_size, size=8).astype(np.int32)
                    for _ in range(batch)]
         engine.generate(prompts, max_new=4)     # warmup/compile
+        max_new = 4 if smoke else 16
         t0 = time.time()
-        outs = engine.generate(prompts, max_new=16)
+        outs = engine.generate(prompts, max_new=max_new)
         dt = time.time() - t0
         n = sum(len(o) for o in outs)
         rows.add(f"serving/decode_tok_per_s/b{batch}", n / dt * 1e6 / 1e6,
                  f"{n} tokens in {dt:.2f}s (reduced {arch})")
 
 
+def run_seizure(rows: Rows, smoke: bool = False) -> None:
+    """Fused jitted scoring path vs the unfused per-stage, per-tree path."""
+    forest_cfg = rf.RotationForestConfig(
+        n_trees=4 if smoke else 8, n_subsets=3, depth=4 if smoke else 6,
+        n_classes=2, n_bins=16,
+    )
+    cfg = pipeline.PipelineConfig(forest=forest_cfg)
+    rec = eeg_data.make_training_set(jax.random.PRNGKey(0), 3, 60, 60)
+    fitted = pipeline.fit(jax.random.PRNGKey(1), rec, cfg)
+
+    batch = 2 if smoke else 4
+    reps = 1 if smoke else 3
+    per = eeg_data.WINDOWS_PER_MATRIX
+    stream = eeg_data.generate_windows(
+        jax.random.PRNGKey(2), jnp.asarray(3), eeg_data.INTERICTAL,
+        batch * per,
+    )
+    chunks_np = np.asarray(stream).reshape(
+        batch, per, eeg_data.N_CHANNELS, eeg_data.WINDOW
+    )
+    n_windows = batch * per
+
+    # --- fused: one donated jitted step over the whole padded batch -------
+    svc = SeizureScoringService(fitted, cfg, max_batch=batch)
+
+    def fused():
+        return svc.score_batch(chunks_np)[0]
+
+    t_fused = time_fn(fused, iters=reps) / 1e6  # us -> s
+    rows.add("serving/seizure/fused_windows_per_s", n_windows / t_fused * 1.0,
+             f"{n_windows} windows in {t_fused*1e3:.1f}ms, b{batch}")
+
+    # --- unfused baselines: per-chunk pipeline stage dispatches with two
+    # forest variants -----------------------------------------------------
+    def _vmapped_forest(x):
+        """The pre-fusion predict_proba: one vmapped per-tree traversal."""
+        forest = fitted.forest
+        pad = forest.rotation.shape[-1] - x.shape[1]
+        if pad > 0:
+            x = jnp.pad(x, ((0, 0), (0, pad)))
+        probs = jax.vmap(
+            lambda rot, tree: dt.predict_proba(tree, x @ rot)
+        )(forest.rotation, forest.trees)
+        return jnp.mean(probs, axis=0)
+
+    def _unfused(forest_fn):
+        def bench():
+            out = []
+            for i in range(batch):
+                feats = pipeline.process_windows(jnp.asarray(chunks_np[i]), cfg)
+                normed, _, _ = features.normalize(
+                    feats, fitted.feat_mean, fitted.feat_std
+                )
+                preds = jnp.argmax(forest_fn(normed), axis=-1)
+                out.append(jnp.mean(preds.astype(jnp.float32)) > 0.5)
+            return jnp.stack(out)
+        return bench
+
+    t_vmap = time_fn(_unfused(_vmapped_forest), iters=reps) / 1e6
+    rows.add("serving/seizure/unfused_vmap_windows_per_s",
+             n_windows / t_vmap * 1.0,
+             f"{n_windows} windows in {t_vmap*1e3:.1f}ms, b{batch}")
+    t_tree = time_fn(
+        _unfused(lambda x: rf.predict_proba_per_tree(fitted.forest, x)),
+        iters=reps,
+    ) / 1e6
+    rows.add("serving/seizure/unfused_pertree_windows_per_s",
+             n_windows / t_tree * 1.0,
+             f"{n_windows} windows in {t_tree*1e3:.1f}ms, b{batch}")
+    rows.add("serving/seizure/fused_speedup", t_vmap / t_fused,
+             "vmapped-unfused time / fused time (>1 = fused wins)")
+    rows.add("serving/seizure/fused_speedup_vs_pertree", t_tree / t_fused,
+             "per-tree-loop time / fused time")
+
+
+def run(rows: Rows, arch: str = "qwen3-0.6b", smoke: bool = False) -> None:
+    run_lm(rows, arch=arch, smoke=smoke)
+    run_seizure(rows, smoke=smoke)
+
+
 if __name__ == "__main__":
-    run(Rows())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 rep (the CI artifact run)")
+    ap.add_argument("--json", default=None, help="write rows to this path")
+    args = ap.parse_args()
+    r = Rows()
+    print("name,us_per_call,derived")
+    run(r, smoke=args.smoke)
+    if args.json:
+        r.to_json(args.json, bench="serving", smoke=args.smoke)

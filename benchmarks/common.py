@@ -1,7 +1,8 @@
-"""Shared benchmark helpers: timing + CSV rows."""
+"""Shared benchmark helpers: timing + CSV rows + JSON artifacts."""
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable
 
@@ -31,3 +32,16 @@ class Rows:
             print(f"{name},{us_per_call:.1f},{derived}")
         else:
             print(f"{name},{us_per_call},{derived}")
+
+    def to_json(self, path: str, **meta) -> None:
+        """Write the collected rows as a BENCH_*.json artifact (the per-PR
+        perf trajectory CI uploads)."""
+        payload = {
+            "meta": {"backend": jax.default_backend(), **meta},
+            "rows": [
+                {"name": n, "value": v, "derived": d} for n, v, d in self.rows
+            ],
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {path}")

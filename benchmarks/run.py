@@ -1,13 +1,17 @@
 """Benchmark harness entrypoint: one bench per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only substr]
+  PYTHONPATH=src python -m benchmarks.run [--only substr] [--smoke]
 
-CSV rows: ``name,us_per_call_or_value,derived``.
+CSV rows: ``name,us_per_call_or_value,derived``. ``--smoke`` runs the
+smoke-capable benches on tiny shapes with 1 rep and writes a
+``BENCH_*.json`` artifact (what CI uploads per PR to record the perf
+trajectory).
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -16,6 +20,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on bench module name")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 rep, JSON artifact; only benches "
+                         "that support smoke mode run")
+    ap.add_argument("--json", default=None,
+                    help="write rows to this JSON path "
+                         "(default BENCH_smoke.json with --smoke)")
     args = ap.parse_args()
 
     from benchmarks import (bench_dataset_size, bench_execution_time,
@@ -40,13 +50,19 @@ def main() -> None:
     for name, fn in benches:
         if args.only and args.only not in name:
             continue
+        takes_smoke = "smoke" in inspect.signature(fn).parameters
+        if args.smoke and not takes_smoke:
+            continue
         t0 = time.time()
         try:
-            fn(rows)
+            fn(rows, smoke=args.smoke) if takes_smoke else fn(rows)
         except Exception as e:  # keep the harness going; report
             failures += 1
             rows.add(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    json_path = args.json or ("BENCH_smoke.json" if args.smoke else None)
+    if json_path:
+        rows.to_json(json_path, smoke=args.smoke)
     if failures:
         sys.exit(1)
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import decision_tree as dt
 from repro.core import pca
+from repro.kernels.forest import ops as forest_ops
 
 
 class RotationForestConfig(NamedTuple):
@@ -124,18 +125,41 @@ def fit(key: jax.Array, x: jax.Array, y: jax.Array, cfg: RotationForestConfig) -
     return RotationForestParams(rotation=rots, trees=trees)
 
 
-def predict_proba(params: RotationForestParams, x: jax.Array) -> jax.Array:
-    """(N, C) ensemble-averaged class probabilities."""
+def pack(params: RotationForestParams) -> forest_ops.PackedForest:
+    """Dense inference-only packing for the fused batched traversal
+    (kernels/forest). Pack once, score many batches."""
+    return forest_ops.pack_forest(params)
+
+
+def predict_proba(
+    params: RotationForestParams, x: jax.Array, *, use_pallas: bool | None = False
+) -> jax.Array:
+    """(N, C) ensemble-averaged class probabilities via the fused single
+    (N, n_trees) traversal -- no per-tree loop. ``use_pallas=None`` picks
+    the Pallas kernel on TPU; the default False keeps the pure-JAX
+    formulation (bit-stable under vmap, e.g. core.ensemble)."""
+    return forest_ops.forest_predict_proba(
+        pack(params), x.astype(jnp.float32), use_pallas=use_pallas
+    )
+
+
+def predict_proba_per_tree(params: RotationForestParams, x: jax.Array) -> jax.Array:
+    """Reference (and benchmark-baseline) path: a Python loop over trees,
+    each doing rotate -> quantile-bin -> heap walk. Semantically identical
+    to ``predict_proba``; kept as the oracle the fused path is tested
+    against and as the unfused baseline bench_serving times."""
     x = x.astype(jnp.float32)
     f = params.rotation.shape[-1]
     if x.shape[1] < f:
         x = jnp.pad(x, ((0, 0), (0, f - x.shape[1])))
-
-    def one(rot, tree):
-        return dt.predict_proba(tree, x @ rot)
-
-    probs = jax.vmap(one)(params.rotation, params.trees)  # (T, N, C)
-    return jnp.mean(probs, axis=0)
+    n_trees = params.rotation.shape[0]
+    probs = [
+        dt.predict_proba(
+            jax.tree.map(lambda t: t[i], params.trees), x @ params.rotation[i]
+        )
+        for i in range(n_trees)
+    ]
+    return jnp.mean(jnp.stack(probs), axis=0)
 
 
 def predict(params: RotationForestParams, x: jax.Array) -> jax.Array:

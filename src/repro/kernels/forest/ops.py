@@ -1,0 +1,110 @@
+"""Public fused rotation-forest inference: pack once, traverse batched.
+
+``pack_forest`` lowers a fitted ``core.rotation_forest`` ensemble into the
+dense (proj, thr, leaf_probs) tensors described in ref.py; the packing is
+exact -- ``proj[t, :, i]`` is literally the rotation column of node i's
+split feature, and ``thr`` is the chosen quantile bin edge -- so the fused
+traversal routes every sample to the same leaf as the per-tree reference
+path (``core.rotation_forest.predict_proba_per_tree``).
+
+This module deliberately imports nothing from ``repro.core`` (the core
+imports *us*); it consumes the params structurally: any object with
+``.rotation`` (T, F, F) and ``.trees`` carrying ``split_feature`` (T, L),
+``split_bin`` (T, L), ``leaf_probs`` (T, L, C), ``bin_edges`` (T, F, E).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.forest import kernel as _kernel
+from repro.kernels.forest import ref as _ref
+
+
+class PackedForest(NamedTuple):
+    """Dense inference-only forest representation (leading axis = tree)."""
+
+    proj: jax.Array        # (T, F, L) rotation column per heap node
+    thr: jax.Array         # (T, L) raw-space threshold, +inf = dead node
+    leaf_probs: jax.Array  # (T, L, C) class distribution per leaf
+
+    @property
+    def n_trees(self) -> int:
+        return self.proj.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.proj.shape[1]
+
+
+@jax.jit
+def pack_forest(params: Any) -> PackedForest:
+    """RotationForestParams -> PackedForest (exact, pure gathers).
+
+    jitted so per-call packing cost is one cached-executable dispatch of
+    (T, L)-sized gathers; hot-loop callers (e.g. the seizure service)
+    should still pack once and reuse the PackedForest across batches."""
+    rot = params.rotation.astype(jnp.float32)          # (T, F, F)
+    feat = params.trees.split_feature                   # (T, L) int32, -1 = dead
+    sbin = params.trees.split_bin                       # (T, L) int32
+    leaf = params.trees.leaf_probs.astype(jnp.float32)  # (T, L, C)
+    edges = params.trees.bin_edges.astype(jnp.float32)  # (T, F, E)
+    n_feat = rot.shape[-1]
+    n_edges = edges.shape[-1]
+
+    safe_feat = jnp.clip(feat, 0, n_feat - 1)
+    # proj[t, :, i] = rot[t][:, split_feature[t, i]]
+    proj = jnp.take_along_axis(rot, safe_feat[:, None, :], axis=2)
+
+    # thr[t, i] = bin_edges[t, split_feature[t, i], split_bin[t, i]].
+    # go-right in binned space (bin code > split_bin, side='left' binning)
+    # is exactly (raw rotated value > that edge).
+    safe_bin = jnp.clip(sbin, 0, n_edges - 1)
+    edges_at_feat = jnp.take_along_axis(edges, safe_feat[:, :, None], axis=1)
+    thr = jnp.take_along_axis(edges_at_feat, safe_bin[:, :, None], axis=2)[..., 0]
+    # Dead nodes (no split: feat == -1, bin == n_bins) always route left.
+    dead = (feat < 0) | (sbin >= n_edges)
+    thr = jnp.where(dead, jnp.inf, thr)
+    return PackedForest(proj=proj, thr=thr, leaf_probs=leaf)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("use_pallas", "block_b", "interpret")
+)
+def forest_predict_proba(
+    packed: PackedForest,
+    x: jax.Array,
+    *,
+    use_pallas: bool | None = None,
+    block_b: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(B, F) raw features -> (B, C) ensemble-MEAN class probabilities in
+    one (B, n_trees) traversal. x is right-padded with zeros if the forest
+    was fit on padded features (F % n_subsets == 0 padding)."""
+    x = x.astype(jnp.float32)
+    f = packed.n_features
+    if x.shape[1] < f:
+        x = jnp.pad(x, ((0, 0), (0, f - x.shape[1])))
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        if interpret is None:
+            interpret = not _on_tpu()
+        total = _kernel.forest_traverse(
+            x, packed.proj, packed.thr, packed.leaf_probs,
+            block_b=block_b, interpret=interpret,
+        )
+    else:
+        total = _ref.forest_traverse(
+            x, packed.proj, packed.thr, packed.leaf_probs
+        )
+    return total / packed.n_trees

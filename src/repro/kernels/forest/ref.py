@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the forest-traversal kernel.
+
+A fitted rotation forest is *packed* (ops.pack_forest) into three dense
+tensors so that inference is linear algebra instead of pointer chasing:
+
+  proj       (T, F, L) -- column i is the rotated-space split feature of
+               heap node i, pulled back into raw feature space: the
+               rotation column rot[:, split_feature[i]]. One matmul
+               x @ proj[t] evaluates EVERY node's split value at once.
+  thr        (T, L)    -- the raw-space threshold of node i (the quantile
+               bin edge the training-time split chose); +inf for dead
+               nodes, so they always route left.
+  leaf_probs (T, L, C) -- class distribution per leaf.
+
+Traversal then has no data-dependent control flow: a sample reaches leaf
+l iff at every level its go-right decision equals the corresponding bit
+of l (heap indexing), which ``leaf_match`` evaluates with broadcasting
+only -- the formulation the Pallas kernel tiles for the MXU/VPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def leaf_match(dirs: jax.Array) -> jax.Array:
+    """(..., L) per-heap-node go-right booleans -> (..., L) one-hot leaf
+    membership. L = 2**depth; heap ids: root = 1, children of i = 2i, 2i+1;
+    slot 0 is unused. Leaf l corresponds to heap id L + l, and its ancestor
+    at level j is heap id 2**j + (l >> (depth - j)); the direction taken
+    out of that ancestor is bit (depth - 1 - j) of l."""
+    shape = dirs.shape
+    l_leaves = shape[-1]
+    depth = l_leaves.bit_length() - 1
+    leaf_ids = jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 1)
+    match = jnp.ones(shape, jnp.bool_)
+    for j in range(depth):
+        span = l_leaves >> j  # leaves under one level-j node
+        level = dirs[..., 2**j : 2 ** (j + 1)]  # (..., 2**j)
+        taken = jnp.broadcast_to(
+            level[..., None], level.shape + (span,)
+        ).reshape(shape)
+        want_right = ((leaf_ids >> (depth - 1 - j)) & 1) == 1
+        match = match & (taken == want_right)
+    return match
+
+
+def forest_traverse(
+    x: jax.Array, proj: jax.Array, thr: jax.Array, leaf_probs: jax.Array
+) -> jax.Array:
+    """x (B, F), packed forest (T, ...) -> (B, C) SUMMED leaf probabilities
+    over trees (callers divide by T for the ensemble mean)."""
+
+    def one_tree(proj_t, thr_t, leaf_t):
+        val = jnp.dot(x, proj_t, preferred_element_type=jnp.float32)  # (B, L)
+        match = leaf_match(val > thr_t[None, :])
+        return jnp.dot(
+            match.astype(jnp.float32), leaf_t, preferred_element_type=jnp.float32
+        )
+
+    probs = jax.vmap(one_tree)(proj, thr, leaf_probs)  # (T, B, C)
+    # Sequential (ascending-tree) accumulation, NOT jnp.sum: matches the
+    # kernel's out += probs_t schedule bit-for-bit in f32.
+    total = probs[0]
+    for t in range(1, probs.shape[0]):
+        total = total + probs[t]
+    return total

@@ -168,6 +168,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax <= 0.4 returns [dict], >= 0.5 dict
+        ca = ca[0] if ca else {}
     cost = hlo_analysis.analyze(compiled.as_text())
     terms = hlo_analysis.roofline_terms(
         cost, peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW)

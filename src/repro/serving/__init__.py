@@ -1,4 +1,12 @@
 from repro.serving.continuous import ContinuousEngine, Request
 from repro.serving.engine import ServeEngine, make_serve_step
+from repro.serving.seizure_service import ScoreResult, SeizureScoringService
 
-__all__ = ["ServeEngine", "make_serve_step", "ContinuousEngine", "Request"]
+__all__ = [
+    "ServeEngine",
+    "make_serve_step",
+    "ContinuousEngine",
+    "Request",
+    "SeizureScoringService",
+    "ScoreResult",
+]

@@ -1,0 +1,14 @@
+"""Shared test helpers, mainly jax cross-version compatibility shims."""
+
+from __future__ import annotations
+
+from jax.sharding import AbstractMesh
+
+
+def abstract_mesh(sizes: tuple[int, ...], names: tuple[str, ...]) -> AbstractMesh:
+    """AbstractMesh across jax versions: >= 0.5 takes (sizes, names);
+    0.4 takes a single tuple of (name, size) pairs."""
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))

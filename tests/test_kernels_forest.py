@@ -1,0 +1,97 @@
+"""Forest-traversal kernel: Pallas interpret mode must be EXACTLY equal
+to the pure-JAX reference (both accumulate trees in ascending order, and
+leaf routing is branch-free compares -- no tolerance needed), and the
+fused path must route every sample to the same leaves as the per-tree
+rotate -> bin -> heap-walk oracle."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rotation_forest as rf
+from repro.kernels.forest import ops as forest_ops
+from repro.kernels.forest import ref as forest_ref
+
+
+def _fit(n: int, f: int, depth: int, n_trees: int = 6, seed: int = 0):
+    kx, ky, kf = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (n, f), jnp.float32)
+    w = jax.random.normal(ky, (f,))
+    y = (x @ w > 0).astype(jnp.int32)
+    cfg = rf.RotationForestConfig(
+        n_trees=n_trees, n_subsets=3, depth=depth, n_classes=2, n_bins=16
+    )
+    params = rf.fit(kf, x, y, cfg)
+    return params, x, y
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4, 6])
+@pytest.mark.parametrize("n,block_b", [(37, 16), (128, 64), (300, 256)])
+def test_pallas_interpret_exactly_equals_ref(depth, n, block_b):
+    params, x, _ = _fit(n, 12, depth)
+    packed = forest_ops.pack_forest(params)
+    p_ref = forest_ops.forest_predict_proba(packed, x, use_pallas=False)
+    p_k = forest_ops.forest_predict_proba(
+        packed, x, use_pallas=True, block_b=block_b, interpret=True
+    )
+    assert p_k.shape == (n, 2)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_ref))
+
+
+@pytest.mark.parametrize("depth", [1, 3, 6])
+def test_fused_routes_like_per_tree_oracle(depth):
+    params, x, _ = _fit(200, 9, depth)  # 9 features, K=3: no padding
+    p_fused = rf.predict_proba(params, x)
+    p_tree = rf.predict_proba_per_tree(params, x)
+    # Same leaves -> same gathered probabilities up to summation order.
+    np.testing.assert_allclose(
+        np.asarray(p_fused), np.asarray(p_tree), atol=1e-6, rtol=1e-6
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(p_fused, -1)), np.asarray(jnp.argmax(p_tree, -1))
+    )
+
+
+def test_feature_padding_matches_fit_padding():
+    # 10 features, K=3 subsets -> forest fit on 12 padded features; the
+    # packed path must apply the identical zero-padding at predict time.
+    params, x, _ = _fit(150, 10, depth=4)
+    assert params.rotation.shape[-1] == 12
+    p = rf.predict_proba(params, x)
+    assert p.shape == (150, 2)
+    np.testing.assert_allclose(
+        np.asarray(p), np.asarray(rf.predict_proba_per_tree(params, x)),
+        atol=1e-6, rtol=1e-6,
+    )
+
+
+def test_probs_normalized_and_finite():
+    params, x, _ = _fit(100, 12, depth=5)
+    p = rf.predict_proba(params, x)
+    assert bool(jnp.isfinite(p).all())
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, atol=1e-4)
+
+
+def test_leaf_match_is_one_hot():
+    # Every sample lands in exactly one leaf, whatever the decisions are.
+    dirs = jax.random.bernoulli(jax.random.PRNGKey(0), 0.5, (64, 32))
+    match = forest_ref.leaf_match(dirs)
+    np.testing.assert_array_equal(
+        np.asarray(match.sum(-1)), np.ones(64, np.int32)
+    )
+
+
+def test_dead_root_sends_all_left():
+    # A pure-label fit produces a splitless tree; every sample must reach
+    # leaf 0 (all-left path) and read the prior from it.
+    x = jnp.ones((32, 6))
+    y = jnp.zeros((32,), jnp.int32)
+    cfg = rf.RotationForestConfig(
+        n_trees=2, n_subsets=3, depth=3, n_classes=2, n_bins=8
+    )
+    params = rf.fit(jax.random.PRNGKey(0), x, y, cfg)
+    p = rf.predict_proba(params, x)
+    assert float(p[:, 0].min()) > 0.9

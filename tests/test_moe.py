@@ -7,6 +7,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

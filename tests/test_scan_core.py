@@ -6,6 +6,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from repro.models import scan_core

@@ -1,0 +1,121 @@
+"""Seizure-scoring service: the fused donated-buffer step must make the
+same alarm decisions as the reference ``signal.pipeline`` path on a
+synthetic preictal/interictal timeline, and the host-side batcher must
+keep per-patient alarm state straight under interleaved traffic."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import rotation_forest as rf
+from repro.serving import SeizureScoringService
+from repro.signal import eeg_data, pipeline
+
+PER = eeg_data.WINDOWS_PER_MATRIX
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return pipeline.PipelineConfig(
+        forest=rf.RotationForestConfig(
+            n_trees=6, n_subsets=3, depth=5, n_classes=2, n_bins=16
+        )
+    )
+
+
+@pytest.fixture(scope="module")
+def fitted(small_cfg):
+    rec = eeg_data.make_training_set(
+        jax.random.PRNGKey(42), 3, n_interictal_windows=60, n_preictal_windows=60
+    )
+    return pipeline.fit(jax.random.PRNGKey(1), rec, small_cfg)
+
+
+@pytest.fixture(scope="module")
+def timeline():
+    return eeg_data.make_test_timeline(
+        jax.random.PRNGKey(7), 3, hours_interictal=1, minutes_preictal=48
+    )
+
+
+def _chunks(rec: eeg_data.Recording) -> np.ndarray:
+    wins = np.asarray(rec.windows)
+    n = wins.shape[0] // PER
+    return wins[: n * PER].reshape(n, PER, *wins.shape[1:])
+
+
+class TestAgainstPipeline:
+    def test_alarm_decisions_match_pipeline(self, fitted, small_cfg, timeline):
+        res = pipeline.evaluate_timeline(fitted, timeline, small_cfg)
+        svc = SeizureScoringService(fitted, small_cfg, max_batch=4)
+        votes, alarms = [], []
+        for chunk in _chunks(timeline):
+            r = svc.score(3, chunk)
+            votes.append(r.chunk_pred)
+            alarms.append(r.alarm)
+        assert votes == np.asarray(res.chunk_preds).tolist()
+        assert alarms == np.asarray(res.alarms).tolist()
+        # The timeline ends at the seizure: the service must be alarming.
+        assert svc.alarm_state(3) == 1
+
+    def test_pallas_forest_path_same_alarms(self, fitted, small_cfg, timeline):
+        svc_ref = SeizureScoringService(fitted, small_cfg, max_batch=2)
+        svc_k = SeizureScoringService(
+            fitted, small_cfg, max_batch=2, use_forest_kernel=True
+        )
+        for chunk in _chunks(timeline)[-6:]:  # preictal tail is the signal
+            a = svc_ref.score(1, chunk)
+            b = svc_k.score(1, chunk)
+            assert a.chunk_pred == b.chunk_pred
+            assert a.alarm == b.alarm
+
+    def test_batched_flush_equals_sequential(self, fitted, small_cfg, timeline):
+        chunks = _chunks(timeline)[:5]
+        svc_a = SeizureScoringService(fitted, small_cfg, max_batch=8)
+        svc_b = SeizureScoringService(fitted, small_cfg, max_batch=2)
+        for chunk in chunks:
+            svc_a.submit(3, chunk)
+        batched = [r.chunk_pred for r in svc_a.flush()]
+        sequential = [svc_b.score(3, chunk).chunk_pred for chunk in chunks]
+        assert batched == sequential
+
+
+class TestBatcherState:
+    def test_interleaved_patients_have_independent_alarms(
+        self, fitted, small_cfg, timeline
+    ):
+        chunks = _chunks(timeline)
+        pre, inter = chunks[-1], chunks[0]  # strongly pre-ictal vs quiet
+        svc = SeizureScoringService(fitted, small_cfg, max_batch=4)
+        for _ in range(small_cfg.alarm_m):
+            svc.submit(101, pre)    # patient 101 streams preictal chunks
+            svc.submit(202, inter)  # patient 202 stays interictal
+        results = svc.flush()
+        assert svc.alarm_state(101) == 1
+        assert svc.alarm_state(202) == 0
+        by_patient = {r.patient_id for r in results}
+        assert by_patient == {101, 202}
+
+    def test_alarm_needs_k_of_m(self, fitted, small_cfg, timeline):
+        pre = _chunks(timeline)[-1]
+        svc = SeizureScoringService(fitted, small_cfg, max_batch=1)
+        states = [svc.score(7, pre).alarm for _ in range(small_cfg.alarm_k)]
+        # first k-1 chunks cannot fire; the k-th one does
+        assert states[:-1] == [0] * (small_cfg.alarm_k - 1)
+        assert states[-1] == 1
+
+    def test_reset_patient_clears_ring(self, fitted, small_cfg, timeline):
+        pre = _chunks(timeline)[-1]
+        svc = SeizureScoringService(fitted, small_cfg, max_batch=1)
+        for _ in range(small_cfg.alarm_m):
+            svc.score(5, pre)
+        assert svc.alarm_state(5) == 1
+        svc.reset_patient(5)
+        assert svc.alarm_state(5) == 0
+
+    def test_rejects_malformed_chunk(self, fitted, small_cfg):
+        svc = SeizureScoringService(fitted, small_cfg)
+        with pytest.raises(ValueError, match="chunk shape"):
+            svc.submit(1, np.zeros((PER, 2, 128), np.float32))
