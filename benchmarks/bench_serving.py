@@ -1,18 +1,24 @@
 """Serving throughput.
 
-Two workloads:
+Three workloads:
 
   * ``lm``      -- tokens/s of the batched decode engine (reduced configs
     on CPU; the relative batch scaling is the signal, absolute TPU rates
     come from the decode rooflines).
-  * ``seizure`` -- EEG windows/s of the fused seizure-scoring service
-    (``serving.seizure_service``) vs two unfused baselines on the same
-    synthetic chunks and fitted forest: per-chunk ``signal.pipeline``
-    stage dispatches with (a) the per-tree Python forest loop
-    (``rotation_forest.predict_proba_per_tree``) and (b) the vmapped
-    per-tree traversal (the pre-fusion ``predict_proba``). The
+  * ``seizure`` -- EEG windows/s of the fused seizure-scoring step
+    (``serving.api.SeizureEngine.score_chunks``) vs two unfused baselines
+    on the same synthetic chunks and fitted forest: per-chunk
+    ``signal.pipeline`` stage dispatches with (a) the per-tree Python
+    forest loop (``rotation_forest.predict_proba_per_tree``) and (b) the
+    vmapped per-tree traversal (the pre-fusion ``predict_proba``). The
     fused/vmapped ratio is the honest headline; the per-tree row bounds
     the dispatch-overhead worst case.
+  * ``staggered`` -- continuous batching vs PR 1 flush batching on a
+    staggered-arrival trace: rounds of alternating B+1 / B-1 new
+    single-chunk patients. The flush baseline must pad every uneven
+    round to the fixed batch; the engine carries the leftover in its
+    queue and refills freed slots mid-flight, so its batches stay dense.
+    Both run the SAME fused device step -- the delta is pure scheduling.
 
   PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json F]
 """
@@ -20,6 +26,8 @@ Two workloads:
 from __future__ import annotations
 
 import argparse
+import collections
+import functools
 import time
 
 import jax
@@ -31,8 +39,20 @@ from repro.configs import get_config
 from repro.core import decision_tree as dt
 from repro.core import rotation_forest as rf
 from repro.models import build
-from repro.serving import SeizureScoringService, ServeEngine
+from repro.serving import ScoringProgram, SeizureEngine, ServeEngine
 from repro.signal import eeg_data, features, pipeline
+
+
+@functools.lru_cache(maxsize=2)
+def _fitted_program(smoke: bool):
+    forest_cfg = rf.RotationForestConfig(
+        n_trees=4 if smoke else 8, n_subsets=3, depth=4 if smoke else 6,
+        n_classes=2, n_bins=16,
+    )
+    cfg = pipeline.PipelineConfig(forest=forest_cfg)
+    rec = eeg_data.make_training_set(jax.random.PRNGKey(0), 3, 60, 60)
+    fitted = pipeline.fit(jax.random.PRNGKey(1), rec, cfg)
+    return fitted, cfg, ScoringProgram.from_fitted(fitted, cfg)
 
 
 def run_lm(rows: Rows, arch: str = "qwen3-0.6b", smoke: bool = False) -> None:
@@ -56,13 +76,7 @@ def run_lm(rows: Rows, arch: str = "qwen3-0.6b", smoke: bool = False) -> None:
 
 def run_seizure(rows: Rows, smoke: bool = False) -> None:
     """Fused jitted scoring path vs the unfused per-stage, per-tree path."""
-    forest_cfg = rf.RotationForestConfig(
-        n_trees=4 if smoke else 8, n_subsets=3, depth=4 if smoke else 6,
-        n_classes=2, n_bins=16,
-    )
-    cfg = pipeline.PipelineConfig(forest=forest_cfg)
-    rec = eeg_data.make_training_set(jax.random.PRNGKey(0), 3, 60, 60)
-    fitted = pipeline.fit(jax.random.PRNGKey(1), rec, cfg)
+    fitted, cfg, program = _fitted_program(smoke)
 
     batch = 2 if smoke else 4
     reps = 1 if smoke else 3
@@ -77,10 +91,10 @@ def run_seizure(rows: Rows, smoke: bool = False) -> None:
     n_windows = batch * per
 
     # --- fused: one donated jitted step over the whole padded batch -------
-    svc = SeizureScoringService(fitted, cfg, max_batch=batch)
+    engine = SeizureEngine(program, max_batch=batch)
 
     def fused():
-        return svc.score_batch(chunks_np)[0]
+        return engine.score_chunks(chunks_np)[0]
 
     t_fused = time_fn(fused, iters=reps) / 1e6  # us -> s
     rows.add("serving/seizure/fused_windows_per_s", n_windows / t_fused * 1.0,
@@ -129,9 +143,86 @@ def run_seizure(rows: Rows, smoke: bool = False) -> None:
              "per-tree-loop time / fused time")
 
 
+def run_seizure_staggered(rows: Rows, smoke: bool = False) -> None:
+    """Continuous engine vs PR-1 flush batching on staggered arrivals."""
+    _, cfg, program = _fitted_program(smoke)
+    batch = 2 if smoke else 4
+    rounds = 4 if smoke else 8
+    reps = 1 if smoke else 3
+    per = eeg_data.WINDOWS_PER_MATRIX
+    chunk = np.asarray(eeg_data.generate_windows(
+        jax.random.PRNGKey(2), jnp.asarray(3), eeg_data.INTERICTAL, per
+    ))
+    # Round r delivers one chunk from each of a_r NEW patients; uneven
+    # round sizes are what continuous batching converts into throughput.
+    arrivals = [batch + 1 if r % 2 == 0 else batch - 1 for r in range(rounds)]
+    n_chunks = sum(arrivals)
+    n_windows = n_chunks * per
+
+    def flush_batched():
+        """PR 1 semantics: every round drains its queue in padded
+        fixed-size batches (host-side alarm deques). Constructs its own
+        engine like continuous() does, so the timed delta is scheduling,
+        not setup."""
+        score_engine = SeizureEngine(program, max_batch=batch)
+        rings: dict[int, collections.deque] = {}
+        pid, steps = 0, 0
+        for a in arrivals:
+            queue = []
+            for _ in range(a):
+                queue.append(pid)
+                pid += 1
+            while queue:
+                reqs, queue = queue[:batch], queue[batch:]
+                b = np.zeros(
+                    (batch, per, eeg_data.N_CHANNELS, eeg_data.WINDOW),
+                    np.float32,
+                )
+                for i in range(len(reqs)):
+                    b[i] = chunk
+                votes = np.asarray(score_engine.score_chunks(b)[0])
+                steps += 1
+                for i, p in enumerate(reqs):
+                    ring = rings.setdefault(
+                        p, collections.deque(maxlen=cfg.alarm_m)
+                    )
+                    ring.append(int(votes[i]))
+        return steps
+
+    def continuous():
+        """Same trace through the slot engine: poll(drain=False) per
+        round keeps batches dense; leftovers ride along with the next
+        round's arrivals instead of padding."""
+        engine = SeizureEngine(program, max_batch=batch)
+        pid = 0
+        for a in arrivals:
+            for _ in range(a):
+                engine.open_session(pid).push(chunk)
+                pid += 1
+            engine.poll(drain=False)
+        engine.poll()
+        return engine.steps
+
+    steps_flush = flush_batched()   # compile + step-count probe
+    steps_engine = continuous()
+    # keep time_fn's own warmup pass: back-to-back first calls are noisy
+    # enough to flip the speedup row, and CI gates on it
+    t_flush = time_fn(flush_batched, iters=reps) / 1e6
+    t_engine = time_fn(continuous, iters=reps) / 1e6
+    rows.add("serving/seizure/staggered_flush_windows_per_s",
+             n_windows / t_flush,
+             f"{n_chunks} chunks in {steps_flush} padded steps, b{batch}")
+    rows.add("serving/seizure/staggered_engine_windows_per_s",
+             n_windows / t_engine,
+             f"{n_chunks} chunks in {steps_engine} dense steps, b{batch}")
+    rows.add("serving/seizure/staggered_engine_speedup", t_flush / t_engine,
+             "flush-batched time / continuous-engine time (>=1 = engine wins)")
+
+
 def run(rows: Rows, arch: str = "qwen3-0.6b", smoke: bool = False) -> None:
     run_lm(rows, arch=arch, smoke=smoke)
     run_seizure(rows, smoke=smoke)
+    run_seizure_staggered(rows, smoke=smoke)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,86 @@
+"""Gate a smoke-benchmark run against the committed baseline.
+
+CI runs ``benchmarks.run --smoke --json BENCH_smoke.json`` and then:
+
+  python benchmarks/compare_baseline.py benchmarks/baseline_smoke.json \
+      BENCH_smoke.json
+
+Each gated row (default: the fused serving row) must not regress more
+than ``--max-regression`` (fraction, default 0.30) below the baseline
+value -- higher is better for every gated row (windows/s or speedup
+ratios). Rows present in the current run but not the baseline are
+reported, not gated, so new benchmarks land before their baseline does.
+
+Refresh the baseline by copying a trusted runner's BENCH_smoke.json over
+``benchmarks/baseline_smoke.json`` (deliberately, in its own commit).
+
+Stdlib-only: runs before/without the repro package installed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Gate the fused serving row (absolute windows/s -- refresh the baseline
+# when runner hardware changes) plus its hardware-independent fused/
+# unfused ratio. The staggered rows are recorded for the trajectory but
+# swing too much at 1 smoke rep to gate at 30%.
+DEFAULT_ROWS = [
+    "serving/seizure/fused_windows_per_s",
+    "serving/seizure/fused_speedup",
+]
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    out = {}
+    for row in payload.get("rows", []):
+        if isinstance(row.get("value"), (int, float)):
+            out[row["name"]] = float(row["value"])
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--row", action="append", default=None,
+                    help="row name to gate (repeatable); default: "
+                         + ", ".join(DEFAULT_ROWS))
+    ap.add_argument("--max-regression", type=float, default=0.30,
+                    help="fail if current < baseline * (1 - this)")
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+    failures = 0
+    for name in args.row or DEFAULT_ROWS:
+        if name not in base:
+            print(f"SKIP  {name}: not in baseline (seed it next refresh)")
+            continue
+        if name not in cur:
+            print(f"FAIL  {name}: missing from current run")
+            failures += 1
+            continue
+        floor = base[name] * (1.0 - args.max_regression)
+        verdict = "ok  " if cur[name] >= floor else "FAIL"
+        if cur[name] < floor:
+            failures += 1
+        print(f"{verdict}  {name}: current={cur[name]:.1f} "
+              f"baseline={base[name]:.1f} floor={floor:.1f}")
+    # ERROR rows mean a bench crashed upstream; surface them here too.
+    for name in cur:
+        if name.endswith("/ERROR"):
+            print(f"FAIL  {name}: bench crashed")
+            failures += 1
+    if failures:
+        print(f"{failures} gated row(s) regressed beyond "
+              f"{args.max_regression:.0%} -- see above")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

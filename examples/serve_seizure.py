@@ -1,10 +1,12 @@
-"""Fused seizure-scoring service demo: multi-patient chunk traffic.
+"""Streaming seizure-scoring demo: continuous multi-patient sessions.
 
-Trains a per-patient rotation forest on synthetic Freiburg-like EEG,
-then streams interleaved 8-minute chunks from several patients through
-``serving.SeizureScoringService`` -- the donated-buffer jitted step that
-fuses MSPCA denoise -> WPD features -> packed forest vote -> chunk vote,
-with the k-of-m alarm rings advancing on the host.
+Trains a rotation forest on synthetic Freiburg-like EEG, freezes it into
+a ``ScoringProgram``, then streams raw windows from several patients
+through ``serving.SeizureEngine`` sessions. Pushes are NOT chunk-aligned
+(the session assembles the paper's 60-window chunks itself), slots are
+refilled mid-flight as sessions drain, and the k-of-m alarm rule runs
+on-device inside the fused scoring step; typed events
+(ChunkScored / AlarmRaised / AlarmCleared) come back from ``poll``.
 
   PYTHONPATH=src python examples/serve_seizure.py --patients 2 --batch 4
 """
@@ -18,7 +20,7 @@ import jax
 import numpy as np
 
 from repro.core import rotation_forest as rf
-from repro.serving import SeizureScoringService
+from repro.serving import AlarmRaised, ChunkScored, ScoringProgram, SeizureEngine
 from repro.signal import eeg_data, pipeline
 
 
@@ -27,6 +29,11 @@ def main() -> None:
     ap.add_argument("--patients", type=int, default=2)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--hours-interictal", type=int, default=1)
+    ap.add_argument("--push-windows", type=int, default=25,
+                    help="windows per push (deliberately chunk-unaligned)")
+    ap.add_argument("--save-dir", default=None,
+                    help="optionally round-trip the ScoringProgram "
+                         "through the checkpoint store")
     ap.add_argument("--use-forest-kernel", action="store_true",
                     help="Pallas forest traversal (interpret mode off-TPU)")
     args = ap.parse_args()
@@ -38,46 +45,57 @@ def main() -> None:
     )
 
     # One forest serves all patients here (the paper trains per patient;
-    # swap in per-patient FittedPipelines + one service per forest).
+    # swap in per-patient programs + one engine per program).
     rec = eeg_data.make_training_set(jax.random.PRNGKey(0), 0, 60, 60)
     fitted = pipeline.fit(jax.random.PRNGKey(1), rec, cfg)
-    svc = SeizureScoringService(
-        fitted, cfg, max_batch=args.batch,
+    program = ScoringProgram.from_fitted(fitted, cfg)
+    if args.save_dir:
+        path = program.save(args.save_dir)
+        program = ScoringProgram.load(args.save_dir)
+        print(f"round-tripped ScoringProgram through {path}")
+
+    engine = SeizureEngine(
+        program, max_batch=args.batch,
         use_forest_kernel=args.use_forest_kernel,
     )
 
-    per = eeg_data.WINDOWS_PER_MATRIX
     streams = {}
     for pid in range(args.patients):
         tl = eeg_data.make_test_timeline(
             jax.random.PRNGKey(100 + pid), pid,
             hours_interictal=args.hours_interictal, minutes_preictal=48,
         )
-        wins = np.asarray(tl.windows)
-        n = wins.shape[0] // per
-        streams[pid] = wins[: n * per].reshape(n, per, *wins.shape[1:])
+        streams[pid] = np.asarray(tl.windows)
+        engine.open_session(pid)
 
-    n_chunks = min(s.shape[0] for s in streams.values())
-    print(f"serving {args.patients} patients x {n_chunks} chunks "
-          f"(batch {args.batch}, 8 min EEG per chunk)")
+    n_windows = sum(s.shape[0] for s in streams.values())
+    print(f"serving {args.patients} patients, {n_windows} total 8s windows "
+          f"(batch {args.batch}, pushes of {args.push_windows} windows)")
     t0 = time.time()
     scored = 0
-    for c in range(n_chunks):
-        for pid, chunks in streams.items():
-            svc.submit(pid, chunks[c])
-        for r in svc.flush():
-            scored += 1
-            mark = " *** ALARM ***" if r.alarm else ""
-            if r.alarm or r.chunk_pred:
-                print(f"  t={c * 8:4d}min patient {r.patient_id}: "
-                      f"preictal_frac={r.preictal_frac:.2f} "
-                      f"vote={r.chunk_pred}{mark}")
+    offset = 0
+    while any(offset < s.shape[0] for s in streams.values()):
+        for pid, wins in streams.items():
+            engine.session(pid).push(wins[offset:offset + args.push_windows])
+        offset += args.push_windows
+        for event in engine.poll():
+            if isinstance(event, AlarmRaised):
+                print(f"  *** ALARM *** patient {event.patient_id} "
+                      f"at chunk {event.chunk_index} "
+                      f"(t={event.chunk_index * 8}min)")
+            elif isinstance(event, ChunkScored):
+                scored += 1
+                if event.chunk_pred:
+                    print(f"  t={event.chunk_index * 8:4d}min "
+                          f"patient {event.patient_id}: "
+                          f"preictal_frac={event.preictal_frac:.2f} "
+                          f"vote={event.chunk_pred} alarm={event.alarm}")
     dt = time.time() - t0
-    windows = scored * per
+    windows = scored * eeg_data.WINDOWS_PER_MATRIX
     print(f"scored {scored} chunks ({windows} windows) in {dt:.1f}s "
           f"-> {windows / dt:.0f} windows/s")
     for pid in streams:
-        print(f"patient {pid}: final alarm state = {svc.alarm_state(pid)}")
+        print(f"patient {pid}: final alarm state = {engine.alarm_state(pid)}")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,3 @@
-from repro.checkpoint.store import latest_step, restore, save
+from repro.checkpoint.store import latest_step, manifest_like, restore, save
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "manifest_like"]

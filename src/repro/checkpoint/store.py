@@ -63,6 +63,28 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def manifest_like(directory: str, step: int) -> dict[str, jax.ShapeDtypeStruct]:
+    """Build the ``like`` pytree for ``restore`` straight from a saved
+    manifest: a flat {key: ShapeDtypeStruct} dict, one entry per leaf.
+
+    Only round-trips checkpoints that were SAVED from a flat dict (the
+    key then names the dict entry) -- e.g. ``serving.api.ScoringProgram``.
+    Nested pytrees flatten their paths into the key and need the caller
+    to supply the structured ``like`` instead.
+    """
+    src = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+
+    def dtype_of(name):
+        return jax.numpy.bfloat16 if name == "bfloat16" else np.dtype(name)
+
+    return {
+        key: jax.ShapeDtypeStruct(tuple(e["shape"]), dtype_of(e["dtype"]))
+        for key, e in manifest.items()
+    }
+
+
 def restore(directory: str, step: int, like: Any,
             shardings: Any | None = None) -> Any:
     """Restore into the structure of ``like`` (a pytree of arrays or

@@ -125,21 +125,52 @@ def fit(key: jax.Array, x: jax.Array, y: jax.Array, cfg: RotationForestConfig) -
     return RotationForestParams(rotation=rots, trees=trees)
 
 
+# Packed-forest cache: predict/predict_proba used to re-pack the forest
+# on EVERY call; concrete params now pack once. Keyed on the identity of
+# EVERY leaf (rotation AND tree tensors -- params sharing a rotation but
+# carrying different trees must not collide), with the keying leaves held
+# strongly so their ids cannot be recycled while the entry lives. Tracers
+# (vmap/jit traces, e.g. core.ensemble's member vmap) bypass the cache
+# entirely -- caching a tracer would leak it out of its trace.
+_PACK_CACHE: dict[tuple, tuple[list, forest_ops.PackedForest]] = {}
+_PACK_CACHE_MAX = 32
+
+
 def pack(params: RotationForestParams) -> forest_ops.PackedForest:
     """Dense inference-only packing for the fused batched traversal
-    (kernels/forest). Pack once, score many batches."""
-    return forest_ops.pack_forest(params)
+    (kernels/forest). Cached on params identity: pack once, score many
+    batches. ``serving.api.ScoringProgram`` is the serving-path owner of
+    the packed artifact; this cache covers ad-hoc ``predict*`` calls."""
+    leaves = jax.tree.leaves(params)
+    if any(isinstance(leaf, jax.core.Tracer) for leaf in leaves):
+        return forest_ops.pack_forest(params)
+    key = tuple(map(id, leaves))
+    hit = _PACK_CACHE.get(key)
+    if hit is not None and all(a is b for a, b in zip(hit[0], leaves)):
+        return hit[1]
+    packed = forest_ops.pack_forest(params)
+    if len(_PACK_CACHE) >= _PACK_CACHE_MAX:
+        _PACK_CACHE.pop(next(iter(_PACK_CACHE)))
+    _PACK_CACHE[key] = (leaves, packed)
+    return packed
 
 
 def predict_proba(
-    params: RotationForestParams, x: jax.Array, *, use_pallas: bool | None = False
+    params: RotationForestParams,
+    x: jax.Array,
+    *,
+    use_pallas: bool | None = False,
+    packed: forest_ops.PackedForest | None = None,
 ) -> jax.Array:
     """(N, C) ensemble-averaged class probabilities via the fused single
     (N, n_trees) traversal -- no per-tree loop. ``use_pallas=None`` picks
     the Pallas kernel on TPU; the default False keeps the pure-JAX
-    formulation (bit-stable under vmap, e.g. core.ensemble)."""
+    formulation (bit-stable under vmap, e.g. core.ensemble). Pass a
+    pre-packed forest (``pack``/``ScoringProgram``) to skip packing."""
+    if packed is None:
+        packed = pack(params)
     return forest_ops.forest_predict_proba(
-        pack(params), x.astype(jnp.float32), use_pallas=use_pallas
+        packed, x.astype(jnp.float32), use_pallas=use_pallas
     )
 
 

@@ -1,3 +1,11 @@
+from repro.serving.api import (
+    AlarmCleared,
+    AlarmRaised,
+    ChunkScored,
+    ScoringProgram,
+    SeizureEngine,
+    StreamSession,
+)
 from repro.serving.continuous import ContinuousEngine, Request
 from repro.serving.engine import ServeEngine, make_serve_step
 from repro.serving.seizure_service import ScoreResult, SeizureScoringService
@@ -7,6 +15,14 @@ __all__ = [
     "make_serve_step",
     "ContinuousEngine",
     "Request",
+    # session-oriented seizure serving (the public surface)
+    "ScoringProgram",
+    "SeizureEngine",
+    "StreamSession",
+    "ChunkScored",
+    "AlarmRaised",
+    "AlarmCleared",
+    # deprecated PR-1 facade
     "SeizureScoringService",
     "ScoreResult",
 ]

@@ -1,0 +1,572 @@
+"""Unified streaming-session serving API for seizure scoring.
+
+This is THE public serving surface (paper Sec. 2.6 deployed): one frozen,
+checkpointable scoring artifact and one engine that watches many patients'
+EEG streams at once, with the k-of-m alarm rule evaluated on-device.
+
+  * ``ScoringProgram`` -- everything inference needs, packed once: the
+    dense ``PackedForest`` traversal tensors, the training feature
+    statistics, and the static ``PipelineConfig``. Built via
+    ``ScoringProgram.from_fitted`` and round-tripped through
+    ``checkpoint.store`` (arrays) + a JSON sidecar (config).
+  * ``SeizureEngine`` -- a continuous-batching slot scheduler (the
+    ``serving.continuous`` design, ported from LM decode to chunk
+    scoring): a fixed ``max_batch`` of slots, each bound to one patient
+    session, whose donated device state carries that slot's (m,)-deep
+    alarm ring INSIDE the jitted step. Finished sessions free their slot
+    and the queue refills it mid-flight -- no drain-and-flush barrier.
+  * ``StreamSession`` -- per-patient handle: ``push`` arbitrary-length
+    window streams (the session assembles the paper's 60-window chunks
+    internally); results come back from ``engine.poll()`` as typed
+    events: ``ChunkScored``, ``AlarmRaised``, ``AlarmCleared``.
+
+Division of labor: the device step scores a (B, W, C, N) chunk batch --
+MSPCA denoise -> WPD features -> packed forest vote -> chunk vote -- and
+advances the per-slot alarm rings (k-of-m on-device, shardable along
+``data`` with the rest of the batch). The host schedules sessions into
+slots, splices evicted/admitted rings, and turns the tiny (B,) readbacks
+into events.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import json
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import store as ckpt_store
+from repro.core import rotation_forest as rf
+from repro.kernels.forest import ops as forest_ops
+from repro.signal import eeg_data, features, pipeline
+
+
+# ---------------------------------------------------------------------------
+# Events
+# ---------------------------------------------------------------------------
+
+class ChunkScored(NamedTuple):
+    """One 8-minute chunk of one patient was scored."""
+
+    patient_id: int
+    chunk_index: int       # per-session sequence number (0-based)
+    chunk_pred: int        # 1 = chunk voted preictal
+    preictal_frac: float   # fraction of the chunk's windows voted preictal
+    alarm: int             # k-of-m alarm state AFTER this chunk
+    window_preds: np.ndarray  # (chunk_windows,) int32 per-window labels
+
+
+class AlarmRaised(NamedTuple):
+    """The k-of-m rule transitioned 0 -> 1 at this chunk."""
+
+    patient_id: int
+    chunk_index: int
+
+
+class AlarmCleared(NamedTuple):
+    """The k-of-m rule transitioned 1 -> 0 (hits aged out of the ring)."""
+
+    patient_id: int
+    chunk_index: int
+
+
+# ---------------------------------------------------------------------------
+# ScoringProgram: the frozen inference artifact
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScoringProgram:
+    """Pack once, serve forever: the complete inference-time artifact.
+
+    packed    : dense forest traversal tensors (``kernels.forest``).
+    feat_mean : (F,) training feature means (z-score statistics).
+    feat_std  : (F,) training feature stds.
+    cfg       : the static ``PipelineConfig`` the forest was trained with.
+    """
+
+    packed: forest_ops.PackedForest
+    feat_mean: jax.Array
+    feat_std: jax.Array
+    cfg: pipeline.PipelineConfig
+
+    @classmethod
+    def from_fitted(
+        cls, fitted: pipeline.FittedPipeline, cfg: pipeline.PipelineConfig
+    ) -> "ScoringProgram":
+        """Lower a trained ``FittedPipeline`` into the serving artifact.
+        This is the one place forest packing happens on the serving path
+        (``rotation_forest.pack`` caches, so repeated calls are free)."""
+        return cls(
+            packed=rf.pack(fitted.forest),
+            feat_mean=fitted.feat_mean,
+            feat_std=fitted.feat_std,
+            cfg=cfg,
+        )
+
+    # -- persistence (checkpoint/store arrays + JSON config sidecar) --------
+
+    def _arrays(self) -> dict[str, jax.Array]:
+        return {
+            "proj": self.packed.proj,
+            "thr": self.packed.thr,
+            "leaf_probs": self.packed.leaf_probs,
+            "feat_mean": self.feat_mean,
+            "feat_std": self.feat_std,
+        }
+
+    def save(self, directory: str, step: int = 0) -> str:
+        """Write the program under ``directory/step_<step>`` (atomic).
+
+        The static config rides INSIDE the checkpoint as a uint8 leaf
+        (JSON bytes), so the store's temp-dir + rename atomicity covers
+        the whole artifact -- a killed save never leaves arrays without
+        their config."""
+        os.makedirs(directory, exist_ok=True)
+        cfg_json = self.cfg._asdict()
+        cfg_json["forest"] = self.cfg.forest._asdict()
+        arrays = dict(self._arrays())
+        arrays["cfg_json"] = np.frombuffer(
+            json.dumps(cfg_json).encode(), dtype=np.uint8
+        )
+        return ckpt_store.save(directory, step, arrays)
+
+    @classmethod
+    def load(cls, directory: str, step: int | None = None) -> "ScoringProgram":
+        """Restore a saved program (latest step when ``step`` is None)."""
+        if step is None:
+            step = ckpt_store.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {directory}")
+        like = ckpt_store.manifest_like(directory, step)
+        arrays = ckpt_store.restore(directory, step, like)
+        cfg_json = json.loads(
+            np.asarray(arrays.pop("cfg_json")).tobytes().decode()
+        )
+        forest_cfg = rf.RotationForestConfig(**cfg_json.pop("forest"))
+        cfg = pipeline.PipelineConfig(forest=forest_cfg, **cfg_json)
+        return cls(
+            packed=forest_ops.PackedForest(
+                proj=arrays["proj"], thr=arrays["thr"],
+                leaf_probs=arrays["leaf_probs"],
+            ),
+            feat_mean=arrays["feat_mean"],
+            feat_std=arrays["feat_std"],
+            cfg=cfg,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Device step
+# ---------------------------------------------------------------------------
+
+class EngineState(NamedTuple):
+    """Per-slot device state (leading axis = slot, sharded along ``data``).
+
+    The alarm ring lives HERE, inside the jitted step: ``rings[b]`` holds
+    slot b's last ``alarm_m`` chunk votes (zero-initialized, so a ring
+    with fewer than m votes written behaves exactly like the reference
+    deque), ``ring_pos[b]`` the next cyclic write index, ``alarm[b]`` the
+    k-of-m state after the slot's latest chunk.
+    """
+
+    rings: jax.Array     # (B, m) int32
+    ring_pos: jax.Array  # (B,) int32
+    alarm: jax.Array     # (B,) int32
+
+
+def init_state(max_batch: int, alarm_m: int) -> EngineState:
+    return EngineState(
+        rings=jnp.zeros((max_batch, alarm_m), jnp.int32),
+        ring_pos=jnp.zeros((max_batch,), jnp.int32),
+        alarm=jnp.zeros((max_batch,), jnp.int32),
+    )
+
+
+def _score_chunks(chunks, packed, feat_mean, feat_std, *, cfg, use_pallas):
+    """(B, W, C, N) raw chunk windows -> per-chunk vote/fraction/preds.
+
+    The fused map phase: denoise each chunk matrix, extract WPD features,
+    z-score with the training statistics, run the packed forest, majority
+    -vote each chunk. One XLA program; ``chunks`` is donated by callers.
+    """
+    b, w, _, _ = chunks.shape
+    feats = jax.vmap(lambda m: pipeline.process_windows(m, cfg))(chunks)
+    flat = feats.reshape(b * w, feats.shape[-1])
+    normed, _, _ = features.normalize(flat, feat_mean, feat_std)
+    probs = forest_ops.forest_predict_proba(
+        packed, normed, use_pallas=use_pallas
+    )
+    preds = jnp.argmax(probs, axis=-1).reshape(b, w).astype(jnp.int32)
+    frac = jnp.mean(preds.astype(jnp.float32), axis=1)
+    votes = (frac > 0.5).astype(jnp.int32)  # paper: "half of total value"
+    return votes, frac, preds
+
+
+def _engine_step(state, chunks, active, packed, feat_mean, feat_std,
+                 *, cfg, use_pallas):
+    """Score one slot batch AND advance the on-device alarm rings.
+
+    ``active`` is a (B,) 0/1 mask: inactive slots (padding rows) keep
+    their ring/pos/alarm untouched. Everything is per-slot independent,
+    so the whole state advances shardable along the batch axis.
+    """
+    votes, frac, preds = _score_chunks(
+        chunks, packed, feat_mean, feat_std, cfg=cfg, use_pallas=use_pallas
+    )
+    votes = votes * active
+    b, m = state.rings.shape
+    written = state.rings.at[jnp.arange(b), state.ring_pos].set(votes)
+    rings = jnp.where(active[:, None] > 0, written, state.rings)
+    ring_pos = jnp.where(active > 0, (state.ring_pos + 1) % m, state.ring_pos)
+    hits = jnp.sum(rings, axis=1)
+    alarm = jnp.where(
+        active > 0, (hits >= cfg.alarm_k).astype(jnp.int32), state.alarm
+    )
+    return EngineState(rings, ring_pos, alarm), votes, frac, alarm, preds
+
+
+# One shared jit cache across engine instances (cfg/use_pallas static).
+_jit_engine_step = functools.partial(
+    jax.jit, static_argnames=("cfg", "use_pallas"), donate_argnums=(0, 1)
+)(_engine_step)
+
+_jit_score_chunks = functools.partial(
+    jax.jit, static_argnames=("cfg", "use_pallas"), donate_argnums=(0,)
+)(_score_chunks)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _splice_state(state: EngineState, slot, ring, pos, alarm) -> EngineState:
+    """Write one session's saved (ring, pos, alarm) into slot ``slot``.
+
+    ``slot`` is a traced scalar (dynamic_update_slice), so one compiled
+    program covers every slot index."""
+    rings = jax.lax.dynamic_update_slice(
+        state.rings, ring[None].astype(state.rings.dtype), (slot, 0)
+    )
+    return EngineState(
+        rings=rings,
+        ring_pos=state.ring_pos.at[slot].set(pos),
+        alarm=state.alarm.at[slot].set(alarm),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sessions
+# ---------------------------------------------------------------------------
+
+class StreamSession:
+    """One patient's stream handle (created by ``SeizureEngine.open_session``).
+
+    ``push`` accepts ANY number of raw 8-second windows -- (W, C, N) for
+    W >= 0, or a single (C, N) window; the session buffers partial chunks
+    and enqueues each completed ``chunk_windows``-window chunk for
+    scoring. Per-session chunk order is FIFO; results arrive as events
+    from ``engine.poll()``.
+    """
+
+    def __init__(self, engine: "SeizureEngine", patient_id: int):
+        self._engine = engine
+        self.patient_id = patient_id
+        self.chunks: collections.deque[np.ndarray] = collections.deque()
+        self._buf = np.zeros(
+            (0, eeg_data.N_CHANNELS, eeg_data.WINDOW), np.float32
+        )
+        # Host copy of the alarm ring; authoritative only while the
+        # session is NOT resident in a slot (the device copy rules then).
+        self.ring = np.zeros((engine.alarm_m,), np.int32)
+        self.ring_pos = 0
+        self.alarm = 0
+        self.chunk_seq = 0
+        self.slot: int | None = None
+        self.queued = False
+        self.closed = False
+
+    # -- public ------------------------------------------------------------
+
+    def push(self, windows) -> int:
+        """Buffer raw windows; returns the number of now-complete chunks
+        waiting to be scored (engine-wide scheduling happens in ``poll``)."""
+        if self.closed:
+            raise RuntimeError(f"session {self.patient_id} is closed")
+        windows = np.asarray(windows, np.float32)
+        if windows.ndim == 2:
+            windows = windows[None]
+        expect = (eeg_data.N_CHANNELS, eeg_data.WINDOW)
+        if windows.ndim != 3 or windows.shape[1:] != expect:
+            raise ValueError(
+                f"windows shape {windows.shape} != (W, {expect[0]}, {expect[1]})"
+            )
+        # Copy on adopt: np.asarray is a no-copy pass-through for float32
+        # input, and queued chunks are sliced views of _buf -- without the
+        # copy they would alias (and silently track) the caller's buffer.
+        self._buf = (
+            np.concatenate([self._buf, windows]) if self._buf.size
+            else windows.copy()
+        )
+        per = self._engine.chunk_windows
+        while self._buf.shape[0] >= per:
+            self.chunks.append(self._buf[:per])
+            self._buf = self._buf[per:]
+        if self.chunks:
+            self._engine._mark_ready(self)
+        return len(self.chunks)
+
+    @property
+    def pending_windows(self) -> int:
+        """Windows buffered toward the next (incomplete) chunk."""
+        return int(self._buf.shape[0])
+
+    @property
+    def pending_chunks(self) -> int:
+        """Complete chunks waiting to be scored."""
+        return len(self.chunks)
+
+    def close(self) -> None:
+        self._engine.close_session(self.patient_id)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class SeizureEngine:
+    """Continuous-batching multi-patient seizure-scoring engine.
+
+    program       : the frozen ``ScoringProgram`` to serve.
+    max_batch     : number of device slots (one compiled program, ever).
+    chunk_windows : windows per chunk (the paper's 60).
+    mesh          : optional mesh; slots are sharded along ``data``.
+    use_forest_kernel : route the forest stage through the Pallas kernel
+                    (interpret mode off-TPU); default pure-JAX traversal.
+
+    Scheduling: each slot is bound to at most one session; a session
+    scores its chunks strictly in order (its alarm ring is carried in the
+    slot's device state between steps). After every step, slots whose
+    session has nothing ready are freed and refilled from the waiting
+    queue -- new work joins mid-flight, in-flight sessions never stall.
+    """
+
+    def __init__(
+        self,
+        program: ScoringProgram,
+        *,
+        max_batch: int = 8,
+        chunk_windows: int = eeg_data.WINDOWS_PER_MATRIX,
+        mesh: Mesh | None = None,
+        use_forest_kernel: bool = False,
+    ):
+        self.program = program
+        self.max_batch = max_batch
+        self.chunk_windows = chunk_windows
+        self.mesh = mesh
+        self.use_forest_kernel = use_forest_kernel
+        self.alarm_m = program.cfg.alarm_m
+        self.steps = 0  # jitted step invocations (scheduling observability)
+
+        self._sessions: dict[int, StreamSession] = {}
+        self._slots: list[StreamSession | None] = [None] * max_batch
+        self._waiting: collections.deque[StreamSession] = collections.deque()
+        self._state = init_state(max_batch, self.alarm_m)
+
+        if mesh is None:
+            self._step = _jit_engine_step
+            self._splice = _splice_state
+            self._score = _jit_score_chunks
+        else:
+            if max_batch % mesh.shape["data"] != 0:
+                raise ValueError(
+                    f"max_batch={max_batch} not divisible by mesh "
+                    f"data axis {mesh.shape['data']}"
+                )
+            data = NamedSharding(mesh, P("data"))
+            repl = NamedSharding(mesh, P())
+            state_sh = EngineState(rings=data, ring_pos=data, alarm=data)
+            self._state = jax.device_put(self._state, state_sh)
+            # Bind the static config via partial: pjit (jax 0.4) rejects
+            # kwargs once in_shardings is given.
+            statics = dict(cfg=program.cfg, use_pallas=use_forest_kernel)
+            jit_step = jax.jit(
+                functools.partial(_engine_step, **statics),
+                donate_argnums=(0, 1),
+                in_shardings=(state_sh, data, data, repl, repl, repl),
+                out_shardings=(state_sh, data, data, data, data),
+            )
+            jit_score = jax.jit(
+                functools.partial(_score_chunks, **statics),
+                donate_argnums=(0,),
+                in_shardings=(data, repl, repl, repl),
+                out_shardings=(data, data, data),
+            )
+            # Same call signature as the shared jits (statics are baked in).
+            self._step = lambda *a, cfg, use_pallas: jit_step(*a)
+            self._score = lambda *a, cfg, use_pallas: jit_score(*a)
+            self._splice = jax.jit(
+                _splice_state,
+                donate_argnums=(0,),
+                in_shardings=(state_sh, repl, repl, repl, repl),
+                out_shardings=state_sh,
+            )
+
+    # -- sessions ------------------------------------------------------------
+
+    def open_session(self, patient_id: int) -> StreamSession:
+        patient_id = int(patient_id)
+        if patient_id in self._sessions:
+            raise ValueError(f"session for patient {patient_id} already open")
+        session = StreamSession(self, patient_id)
+        self._sessions[patient_id] = session
+        return session
+
+    def session(self, patient_id: int) -> StreamSession | None:
+        return self._sessions.get(int(patient_id))
+
+    def close_session(self, patient_id: int) -> None:
+        """Drop a session and its alarm state (unscored chunks included)."""
+        session = self._sessions.pop(int(patient_id), None)
+        if session is None:
+            return
+        if session.slot is not None:
+            self._slots[session.slot] = None
+            session.slot = None
+        if session.queued:
+            self._waiting.remove(session)
+            session.queued = False
+        session.closed = True
+
+    def alarm_state(self, patient_id: int) -> int:
+        """Current k-of-m alarm state (0 if the patient is unknown)."""
+        session = self._sessions.get(int(patient_id))
+        return int(session.alarm) if session is not None else 0
+
+    def reset_alarm(self, patient_id: int) -> None:
+        """Zero a session's alarm ring WITHOUT touching its queued or
+        buffered windows (e.g. after a confirmed false alarm)."""
+        session = self._sessions.get(int(patient_id))
+        if session is None:
+            return
+        session.ring = np.zeros((self.alarm_m,), np.int32)
+        session.ring_pos = 0
+        session.alarm = 0
+        if session.slot is not None:
+            self._admit(session.slot, session)  # re-splice the zeroed ring
+
+    def _mark_ready(self, session: StreamSession) -> None:
+        if session.slot is None and not session.queued:
+            self._waiting.append(session)
+            session.queued = True
+
+    # -- slot scheduling -----------------------------------------------------
+
+    def _evict(self, slot: int) -> None:
+        """Pull the slot's device alarm ring back into the session."""
+        session = self._slots[slot]
+        ring, pos, alarm = jax.device_get((  # one host sync, not three
+            self._state.rings[slot],
+            self._state.ring_pos[slot],
+            self._state.alarm[slot],
+        ))
+        session.ring = np.asarray(ring)
+        session.ring_pos = int(pos)
+        session.alarm = int(alarm)
+        session.slot = None
+        self._slots[slot] = None
+
+    def _admit(self, slot: int, session: StreamSession) -> None:
+        """Splice the session's saved alarm ring into the slot's state."""
+        self._state = self._splice(
+            self._state,
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(session.ring, jnp.int32),
+            jnp.asarray(session.ring_pos, jnp.int32),
+            jnp.asarray(session.alarm, jnp.int32),
+        )
+        session.slot = slot
+        session.queued = False
+        self._slots[slot] = session
+
+    def _fill_slots(self) -> None:
+        for i in range(self.max_batch):
+            occupant = self._slots[i]
+            if occupant is not None and not occupant.chunks and self._waiting:
+                self._evict(i)  # refill mid-flight: drained session yields
+            if self._slots[i] is None and self._waiting:
+                self._admit(i, self._waiting.popleft())
+
+    # -- serving -------------------------------------------------------------
+
+    def poll(self, *, drain: bool = True) -> list:
+        """Score ready chunks and return the resulting events.
+
+        drain=True (default) scores EVERYTHING ready, zero-padding a final
+        partial batch. drain=False runs only full batches -- leftovers wait
+        for future pushes to pack densely (throughput mode); call
+        ``poll()`` (or ``drain=True``) to flush the tail.
+        """
+        events: list = []
+        while True:
+            self._fill_slots()
+            active = [
+                i for i, s in enumerate(self._slots)
+                if s is not None and s.chunks
+            ]
+            if not active or (not drain and len(active) < self.max_batch):
+                break
+            events.extend(self._step_once(active))
+        return events
+
+    def _step_once(self, active: list[int]) -> list:
+        batch = np.zeros(
+            (self.max_batch, self.chunk_windows, eeg_data.N_CHANNELS,
+             eeg_data.WINDOW),
+            np.float32,
+        )
+        mask = np.zeros((self.max_batch,), np.int32)
+        for i in active:
+            batch[i] = self._slots[i].chunks.popleft()
+            mask[i] = 1
+        program = self.program
+        self._state, votes, frac, alarm, preds = self._step(
+            self._state, jnp.asarray(batch), jnp.asarray(mask),
+            program.packed, program.feat_mean, program.feat_std,
+            cfg=program.cfg, use_pallas=self.use_forest_kernel,
+        )
+        self.steps += 1
+        votes, frac, alarm, preds = jax.device_get((votes, frac, alarm, preds))
+        events: list = []
+        for i in active:
+            session = self._slots[i]
+            prev_alarm, session.alarm = session.alarm, int(alarm[i])
+            events.append(ChunkScored(
+                patient_id=session.patient_id,
+                chunk_index=session.chunk_seq,
+                chunk_pred=int(votes[i]),
+                preictal_frac=float(frac[i]),
+                alarm=session.alarm,
+                window_preds=np.asarray(preds[i]),
+            ))
+            if session.alarm > prev_alarm:
+                events.append(AlarmRaised(session.patient_id, session.chunk_seq))
+            elif session.alarm < prev_alarm:
+                events.append(AlarmCleared(session.patient_id, session.chunk_seq))
+            session.chunk_seq += 1
+        return events
+
+    def score_chunks(self, chunks) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Stateless raw step: an already-assembled (B, W, C, N) batch ->
+        (votes (B,), preictal_frac (B,), window_preds (B, W)) WITHOUT
+        touching any session's alarm ring. The batch is donated -- pass a
+        fresh array. (This is the PR-1 ``score_batch`` contract.)"""
+        program = self.program
+        return self._score(
+            jnp.asarray(chunks), program.packed,
+            program.feat_mean, program.feat_std,
+            cfg=program.cfg, use_pallas=self.use_forest_kernel,
+        )

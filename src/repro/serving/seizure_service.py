@@ -1,44 +1,32 @@
-"""Fused batched multi-patient seizure-scoring service.
+"""DEPRECATED flush-batched facade over ``repro.serving.api``.
 
-Serves the paper's whole inference path (Sec. 2.6) -- raw EEG windows in,
-MSPCA denoise -> WPD features -> rotation-forest vote -> k-of-m alarm
-state out -- as ONE donated-buffer jitted step over a fixed batch of
-8-minute chunks, instead of the per-stage dispatches of
-``signal.pipeline``. The forest stage is the packed (B, n_trees)
-traversal from ``kernels/forest`` (Pallas on TPU, pure-JAX elsewhere).
+``SeizureScoringService`` was the PR-1 serving surface: an exact-shape
+``submit``/``flush`` request batcher with host-side alarm deques. It is
+now a thin shim over the session API -- ``ScoringProgram`` (the frozen
+inference artifact) + ``SeizureEngine`` (continuous-batching slots with
+on-device k-of-m alarm rings) -- kept only so existing callers migrate at
+their own pace. New code should use the engine directly:
 
-Division of labor (modeled on ``serving.engine.ServeEngine``):
-
-  * device: ``_score_chunks`` -- everything static-shaped and fusible.
-    The chunk batch is donated, so steady-state serving re-uses the input
-    HBM buffer instead of allocating per request batch.
-  * host: ``SeizureScoringService`` -- a request batcher that pads
-    requests from many patients into the fixed (max_batch, ...) shape
-    (one compiled program, ever), plus a per-patient alarm ring buffer
-    holding the last ``alarm_m`` chunk votes; the 3-of-5 rule needs state
-    across requests, which is exactly what cannot live in the jit.
-
-Request unit: one 8-minute chunk -- ``WINDOWS_PER_MATRIX`` consecutive
-8-second windows of one patient, the paper's atomic denoising matrix.
-
-With a mesh, the batch axis is sharded along ``data`` (the paper's map
-phase): each device denoises/featurizes/scores its own slice of patients.
+    program = ScoringProgram.from_fitted(fitted, cfg)
+    engine = SeizureEngine(program, max_batch=8)
+    session = engine.open_session(patient_id)
+    session.push(windows)          # any number of windows, any alignment
+    for event in engine.poll():    # ChunkScored / AlarmRaised / AlarmCleared
+        ...
 """
 
 from __future__ import annotations
 
-import collections
 import dataclasses
-import functools
+import warnings
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.kernels.forest import ops as forest_ops
-from repro.signal import eeg_data, features, pipeline
+from repro.serving import api
+from repro.signal import eeg_data, pipeline
 
 
 class ScoreResult(NamedTuple):
@@ -50,37 +38,17 @@ class ScoreResult(NamedTuple):
     alarm: int             # 1 = k-of-m rule fired after this chunk
 
 
-def _score_chunks(chunks, packed, feat_mean, feat_std, *, cfg, use_pallas):
-    """(B, W, C, N) raw chunk windows -> per-chunk vote/fraction/preds.
-
-    The fused step: denoise each chunk matrix, extract WPD features,
-    z-score with the training statistics, run the packed forest, majority
-    -vote each chunk. One XLA program; ``chunks`` is donated by callers.
-    """
-    b, w, _, _ = chunks.shape
-    feats = jax.vmap(lambda m: pipeline.process_windows(m, cfg))(chunks)
-    flat = feats.reshape(b * w, feats.shape[-1])
-    normed, _, _ = features.normalize(flat, feat_mean, feat_std)
-    probs = forest_ops.forest_predict_proba(
-        packed, normed, use_pallas=use_pallas
-    )
-    preds = jnp.argmax(probs, axis=-1).reshape(b, w).astype(jnp.int32)
-    frac = jnp.mean(preds.astype(jnp.float32), axis=1)
-    votes = (frac > 0.5).astype(jnp.int32)  # paper: "half of total value"
-    return votes, frac, preds
-
-
 @dataclasses.dataclass
 class SeizureScoringService:
-    """Host-side driver: request batcher + per-patient alarm rings.
+    """Deprecated: use ``ScoringProgram`` + ``SeizureEngine`` (serving.api).
 
-    fitted        : trained ``signal.pipeline.FittedPipeline``.
-    cfg           : the ``PipelineConfig`` it was trained with.
-    max_batch     : fixed device batch (requests are zero-padded up to it).
-    chunk_windows : windows per request chunk (the paper's 60).
-    mesh          : optional mesh; batch is sharded along ``data``.
-    use_forest_kernel : route the forest stage through the Pallas kernel
-                    (interpret-mode off-TPU); default pure-JAX traversal.
+    Same constructor and results as PR 1; scoring and alarm state now run
+    on the engine (alarm rings on-device instead of host deques). One
+    throughput caveat: a session's chunks score sequentially (its ring
+    lives in one device slot), so bulk-submitting MANY chunks of ONE
+    patient runs one padded step per chunk where PR 1 packed them into a
+    single batch. Cross-patient traffic -- the serving workload -- batches
+    exactly as before.
     """
 
     fitted: pipeline.FittedPipeline
@@ -91,28 +59,19 @@ class SeizureScoringService:
     use_forest_kernel: bool = False
 
     def __post_init__(self):
-        self._packed = forest_ops.pack_forest(self.fitted.forest)
-        self._rings: dict[int, collections.deque] = {}
-        self._queue: list[tuple[int, np.ndarray]] = []
-        step = functools.partial(
-            _score_chunks, cfg=self.cfg, use_pallas=self.use_forest_kernel
+        warnings.warn(
+            "SeizureScoringService is deprecated; use "
+            "repro.serving.ScoringProgram + SeizureEngine instead",
+            DeprecationWarning, stacklevel=3,
         )
-        if self.mesh is not None:
-            if self.max_batch % self.mesh.shape["data"] != 0:
-                raise ValueError(
-                    f"max_batch={self.max_batch} not divisible by mesh "
-                    f"data axis {self.mesh.shape['data']}"
-                )
-            data = NamedSharding(self.mesh, P("data"))
-            repl = NamedSharding(self.mesh, P())
-            self._step = jax.jit(
-                step,
-                donate_argnums=(0,),
-                in_shardings=(data, repl, repl, repl),
-                out_shardings=repl,
-            )
-        else:
-            self._step = jax.jit(step, donate_argnums=(0,))
+        program = api.ScoringProgram.from_fitted(self.fitted, self.cfg)
+        self.engine = api.SeizureEngine(
+            program,
+            max_batch=self.max_batch,
+            chunk_windows=self.chunk_windows,
+            mesh=self.mesh,
+            use_forest_kernel=self.use_forest_kernel,
+        )
 
     # -- device step ----------------------------------------------------------
 
@@ -121,69 +80,55 @@ class SeizureScoringService:
         (max_batch, chunk_windows, C, N) batch WITHOUT touching per-patient
         alarm state: (votes (B,), preictal_frac (B,), window_preds (B, W)).
         The batch is donated -- pass a fresh array."""
-        return self._step(
-            jnp.asarray(chunks), self._packed,
-            self.fitted.feat_mean, self.fitted.feat_std,
-        )
+        return self.engine.score_chunks(chunks)
 
     # -- request batching ----------------------------------------------------
 
     def submit(self, patient_id: int, windows: np.ndarray) -> None:
-        """Queue one 8-minute chunk: (chunk_windows, C, N) raw EEG."""
+        """Queue one 8-minute chunk: (chunk_windows, C, N) raw EEG.
+
+        (The engine's ``StreamSession.push`` accepts arbitrary window
+        counts; this shim keeps PR 1's exact-chunk contract.)"""
         windows = np.asarray(windows, np.float32)
         expect = (self.chunk_windows, eeg_data.N_CHANNELS, eeg_data.WINDOW)
         if windows.shape != expect:
             raise ValueError(f"chunk shape {windows.shape} != {expect}")
-        self._queue.append((int(patient_id), windows))
+        patient_id = int(patient_id)
+        session = self.engine.session(patient_id)
+        if session is None:
+            session = self.engine.open_session(patient_id)
+        session.push(windows)
 
     def flush(self) -> list[ScoreResult]:
-        """Score every queued request (in fixed-size padded batches) and
-        advance each patient's alarm ring buffer."""
-        results: list[ScoreResult] = []
-        while self._queue:
-            reqs, self._queue = (
-                self._queue[: self.max_batch],
-                self._queue[self.max_batch :],
+        """Score every queued chunk and return one result per chunk
+        (per-patient submission order; patients interleave by slot)."""
+        return [
+            ScoreResult(
+                patient_id=e.patient_id,
+                chunk_pred=e.chunk_pred,
+                preictal_frac=e.preictal_frac,
+                alarm=e.alarm,
             )
-            batch = np.zeros(
-                (self.max_batch, self.chunk_windows, eeg_data.N_CHANNELS,
-                 eeg_data.WINDOW),
-                np.float32,
-            )
-            for i, (_, windows) in enumerate(reqs):
-                batch[i] = windows
-            votes, frac, _ = self.score_batch(batch)
-            votes = np.asarray(votes)
-            frac = np.asarray(frac)
-            for i, (pid, _) in enumerate(reqs):
-                results.append(
-                    ScoreResult(
-                        patient_id=pid,
-                        chunk_pred=int(votes[i]),
-                        preictal_frac=float(frac[i]),
-                        alarm=self._advance_ring(pid, int(votes[i])),
-                    )
-                )
-        return results
+            for e in self.engine.poll()
+            if isinstance(e, api.ChunkScored)
+        ]
 
     def score(self, patient_id: int, windows: np.ndarray) -> ScoreResult:
-        """Convenience single-request path: submit + flush."""
+        """Convenience single-request path: submit + flush, returning
+        this patient's (latest) result."""
         self.submit(patient_id, windows)
-        return self.flush()[-1]
+        results = [
+            r for r in self.flush() if r.patient_id == int(patient_id)
+        ]
+        return results[-1]
 
     # -- per-patient alarm state --------------------------------------------
 
-    def _advance_ring(self, patient_id: int, vote: int) -> int:
-        ring = self._rings.setdefault(
-            patient_id, collections.deque(maxlen=self.cfg.alarm_m)
-        )
-        ring.append(vote)
-        return int(sum(ring) >= self.cfg.alarm_k)
-
     def alarm_state(self, patient_id: int) -> int:
         """Current k-of-m alarm state (0 if the patient is unknown)."""
-        ring = self._rings.get(patient_id)
-        return int(ring is not None and sum(ring) >= self.cfg.alarm_k)
+        return self.engine.alarm_state(patient_id)
 
     def reset_patient(self, patient_id: int) -> None:
-        self._rings.pop(patient_id, None)
+        """Clear the patient's alarm ring; queued chunks stay queued
+        (PR 1 semantics -- use ``engine.close_session`` to drop both)."""
+        self.engine.reset_alarm(patient_id)

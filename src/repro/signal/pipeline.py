@@ -16,6 +16,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import mapreduce as mr
 from repro.core import rotation_forest as rf
@@ -65,7 +66,11 @@ def process_windows(windows: jax.Array, cfg: PipelineConfig) -> jax.Array:
         per = eeg_data.WINDOWS_PER_MATRIX
         n_mat = max(1, -(-w // per))
         pad = n_mat * per - w
-        padded = jnp.concatenate([windows, windows[: pad]], axis=0) if pad else windows
+        # Wrap-pad by cyclic tiling: jnp.resize repeats whole rows in
+        # order, which equals concatenate([windows, windows[:pad]]) when
+        # pad <= w and keeps working when the recording is shorter than
+        # one chunk (pad > w, where the concatenate form under-fills).
+        padded = jnp.resize(windows, (n_mat * per, c, n)) if pad else windows
         mats = padded.reshape(n_mat, per, c, n).transpose(0, 3, 1, 2).reshape(
             n_mat, n, per * c
         )
@@ -152,10 +157,31 @@ def evaluate_timeline(
     recording: eeg_data.Recording,
     cfg: PipelineConfig,
 ) -> TimelineResult:
-    """Run the full real-time protocol over a chronological test stream."""
-    preds = predict_windows(fitted, recording.windows, cfg)
-    chunks = chunk_predictions(preds, cfg)
-    alarms = alarm_state(chunks, cfg)
+    """Run the full real-time protocol over a chronological test stream.
+
+    Offline eval and serving share one code path: the stream is pushed
+    through a single-slot ``serving.SeizureEngine`` session, so the chunk
+    votes and alarms here are BY CONSTRUCTION what the serving engine
+    emits. Trailing windows that do not fill a chunk are scored for
+    ``window_preds`` only (self-wrapped denoise context, matching what a
+    live session would see), exactly as ``chunk_predictions`` drops them.
+    """
+    from repro.serving import api  # deferred: serving.api imports us
+
+    program = api.ScoringProgram.from_fitted(fitted, cfg)
+    engine = api.SeizureEngine(program, max_batch=1)
+    session = engine.open_session(0)
+    session.push(recording.windows)
+    scored = [e for e in engine.poll() if isinstance(e, api.ChunkScored)]
+    chunks = jnp.asarray([e.chunk_pred for e in scored], jnp.int32)
+    alarms = jnp.asarray([e.alarm for e in scored], jnp.int32)
+
+    per = eeg_data.WINDOWS_PER_MATRIX
+    window_preds = [e.window_preds for e in scored]
+    if session.pending_windows:
+        tail = recording.windows[len(scored) * per :]
+        window_preds.append(np.asarray(predict_windows(fitted, tail, cfg)))
+    preds = jnp.asarray(np.concatenate(window_preds).astype(np.int32))
 
     true_chunks = chunk_predictions(recording.labels, cfg)
     # Seizure onset chunk = first truly-preictal chunk; the paper counts

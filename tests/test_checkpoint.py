@@ -52,6 +52,18 @@ def test_overwrite_same_step(tmp_path):
     assert float(jnp.sum(jnp.abs(restored.params["a"]))) == 0.0
 
 
+def test_manifest_like_restores_flat_dict(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": jnp.ones((4,), jnp.int32)}
+    ckpt.save(str(tmp_path), 2, tree)
+    like = ckpt.manifest_like(str(tmp_path), 2)
+    assert like["a"].shape == (2, 3) and like["b"].dtype == jnp.int32
+    restored = ckpt.restore(str(tmp_path), 2, like)
+    for key in tree:
+        np.testing.assert_array_equal(np.asarray(tree[key]),
+                                      np.asarray(restored[key]))
+
+
 def test_shape_mismatch_raises(tmp_path):
     state = _state()
     ckpt.save(str(tmp_path), 1, state)

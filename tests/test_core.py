@@ -155,6 +155,78 @@ class TestRotationForest:
         assert m.rotation.shape[0] == 6
         assert float(rf.accuracy(m, x, y)) > 0.95
 
+    def test_pack_is_cached_on_params_identity(self, blobs):
+        x, y = blobs
+        cfg = rf.RotationForestConfig(
+            n_trees=3, n_subsets=3, depth=3, n_classes=2, n_bins=16
+        )
+        params = rf.fit(jax.random.PRNGKey(0), x, y, cfg)
+        assert rf.pack(params) is rf.pack(params)
+        # a distinct (even identical-valued) params pytree packs anew
+        clone = jax.tree.map(lambda t: t + 0, params)
+        assert rf.pack(clone) is not rf.pack(params)
+
+    def test_pack_cache_keys_on_every_leaf(self, blobs):
+        # Params sharing a rotation array but carrying DIFFERENT trees
+        # must not collide in the cache (regression: id(rotation) alone).
+        x, y = blobs
+        cfg = rf.RotationForestConfig(
+            n_trees=3, n_subsets=3, depth=3, n_classes=2, n_bins=16
+        )
+        a = rf.fit(jax.random.PRNGKey(8), x, y, cfg)
+        b = rf.fit(jax.random.PRNGKey(9), x, y, cfg)
+        rf.predict_proba(a, x)
+        mixed = rf.RotationForestParams(rotation=a.rotation, trees=b.trees)
+        got = rf.predict_proba(mixed, x)
+        want = rf.forest_ops.forest_predict_proba(
+            rf.forest_ops.pack_forest(mixed), x.astype(jnp.float32)
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_predict_proba_packs_once(self, blobs, monkeypatch):
+        x, y = blobs
+        cfg = rf.RotationForestConfig(
+            n_trees=3, n_subsets=3, depth=3, n_classes=2, n_bins=16
+        )
+        params = rf.fit(jax.random.PRNGKey(4), x, y, cfg)
+        calls = []
+        real = rf.forest_ops.pack_forest
+        monkeypatch.setattr(
+            rf.forest_ops, "pack_forest",
+            lambda p: (calls.append(1), real(p))[1],
+        )
+        p1 = rf.predict_proba(params, x)
+        p2 = rf.predict_proba(params, x)
+        assert len(calls) == 1  # second call hit the cache
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+    def test_predict_proba_accepts_prepacked(self, blobs):
+        x, y = blobs
+        cfg = rf.RotationForestConfig(
+            n_trees=3, n_subsets=3, depth=3, n_classes=2, n_bins=16
+        )
+        params = rf.fit(jax.random.PRNGKey(5), x, y, cfg)
+        packed = rf.pack(params)
+        np.testing.assert_array_equal(
+            np.asarray(rf.predict_proba(params, x, packed=packed)),
+            np.asarray(rf.predict_proba(params, x)),
+        )
+
+    def test_pack_bypasses_cache_under_tracing(self, blobs):
+        # core.ensemble vmaps predict_proba over member params (tracers);
+        # the identity cache must not capture or serve tracers.
+        x, y = blobs
+        cfg = rf.RotationForestConfig(
+            n_trees=2, n_subsets=3, depth=3, n_classes=2, n_bins=16
+        )
+        a = rf.fit(jax.random.PRNGKey(6), x, y, cfg)
+        b = rf.fit(jax.random.PRNGKey(7), x, y, cfg)
+        members = jax.tree.map(lambda u, v: jnp.stack([u, v]), a, b)
+        before = dict(rf._PACK_CACHE)
+        probs = jax.vmap(lambda p: rf.predict_proba(p, x))(members)
+        assert probs.shape == (2, x.shape[0], 2)
+        assert rf._PACK_CACHE == before  # no tracer entries leaked in
+
     def test_ensemble_beats_single_tree_on_noise(self):
         # Noisy labels: ensemble averaging should not be worse than a stump.
         key = jax.random.PRNGKey(3)

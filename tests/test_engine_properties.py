@@ -1,0 +1,54 @@
+"""Hypothesis property test: ``SeizureEngine`` alarm events are
+bit-identical to the ``signal.pipeline`` ``chunk_predictions`` +
+``alarm_state`` oracle under RANDOM multi-patient interleavings,
+out-of-order session creation, and partial (non-chunk-aligned) pushes.
+
+The checker (and its seeded deterministic variants) lives in
+``test_seizure_engine.py``; this module drives it with drawn inputs."""
+
+from __future__ import annotations
+
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis; CI installs it
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from test_seizure_engine import (  # noqa: F401  (imported fixtures)
+    chunk_pool,
+    fitted,
+    program,
+    run_interleaving,
+    small_cfg,
+    timeline,
+)
+
+
+@settings(
+    max_examples=6,
+    deadline=None,
+    derandomize=True,  # CI stability: same examples every run
+    suppress_health_check=list(HealthCheck),
+)
+@given(data=st.data())
+def test_engine_events_match_alarm_oracle(program, fitted, chunk_pool, data):
+    n_patients = data.draw(st.integers(1, 3), label="n_patients")
+    streams = {}
+    for pid in range(n_patients):
+        chunk_idxs = data.draw(
+            st.lists(st.integers(0, 1), min_size=1, max_size=3),
+            label=f"patient{pid}_chunks",
+        )
+        extra = data.draw(
+            st.sampled_from([0, 30]), label=f"patient{pid}_tail_windows"
+        )
+        streams[pid] = (chunk_idxs, extra)
+    max_batch = data.draw(st.integers(1, 2), label="max_batch")
+    open_order = data.draw(
+        st.permutations(sorted(streams)), label="session_open_order"
+    )
+    seed = data.draw(st.integers(0, 2**16 - 1), label="interleave_seed")
+    run_interleaving(
+        program, fitted, chunk_pool,
+        max_batch=max_batch, streams=streams,
+        open_order=list(open_order), seed=seed,
+    )

@@ -1,0 +1,401 @@
+"""Session-oriented serving API: ``ScoringProgram`` round-trips through
+the checkpoint store, and ``SeizureEngine`` must (a) make bit-identical
+alarm decisions to the ``signal.pipeline`` oracle, (b) admit new sessions
+into freed slots mid-flight without draining the in-flight batch, and
+(c) carry each session's on-device alarm ring across slot evictions."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rotation_forest as rf
+from repro.serving import api
+from repro.signal import eeg_data, pipeline
+
+PER = eeg_data.WINDOWS_PER_MATRIX
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return pipeline.PipelineConfig(
+        forest=rf.RotationForestConfig(
+            n_trees=6, n_subsets=3, depth=5, n_classes=2, n_bins=16
+        )
+    )
+
+
+@pytest.fixture(scope="module")
+def fitted(small_cfg):
+    rec = eeg_data.make_training_set(
+        jax.random.PRNGKey(42), 3, n_interictal_windows=60, n_preictal_windows=60
+    )
+    return pipeline.fit(jax.random.PRNGKey(1), rec, small_cfg)
+
+
+@pytest.fixture(scope="module")
+def program(fitted, small_cfg):
+    return api.ScoringProgram.from_fitted(fitted, small_cfg)
+
+
+@pytest.fixture(scope="module")
+def timeline():
+    return eeg_data.make_test_timeline(
+        jax.random.PRNGKey(7), 3, hours_interictal=1, minutes_preictal=48
+    )
+
+
+@pytest.fixture(scope="module")
+def chunk_pool(timeline):
+    """(quiet, preictal) chunks: vote 0 and vote 1 under the fitted forest."""
+    wins = np.asarray(timeline.windows)
+    n = wins.shape[0] // PER
+    chunks = wins[: n * PER].reshape(n, PER, *wins.shape[1:])
+    return chunks[0], chunks[-1]
+
+
+def oracle_timeline(fitted, cfg, windows):
+    """The reference path the engine must match bit-for-bit: per-window
+    forest predictions -> chunk majority votes -> k-of-m alarm scan."""
+    preds = pipeline.predict_windows(fitted, jnp.asarray(windows), cfg)
+    chunks = pipeline.chunk_predictions(preds, cfg)
+    alarms = pipeline.alarm_state(chunks, cfg)
+    return np.asarray(chunks).tolist(), np.asarray(alarms).tolist()
+
+
+def scored_events(events):
+    return [e for e in events if isinstance(e, api.ChunkScored)]
+
+
+def oracle_chunks(fitted, cfg, chunks):
+    """Per-patient oracle over a list of (PER, C, N) chunks: window preds
+    -> chunk majority votes -> k-of-m alarm scan, all via signal.pipeline."""
+    preds = [
+        pipeline.predict_windows(fitted, jnp.asarray(c), cfg) for c in chunks
+    ]
+    votes = pipeline.chunk_predictions(jnp.concatenate(preds), cfg)
+    alarms = pipeline.alarm_state(votes, cfg)
+    return np.asarray(votes).tolist(), np.asarray(alarms).tolist()
+
+
+def run_interleaving(
+    program, fitted, pool, *, max_batch, streams, open_order, seed
+):
+    """Drive a ``SeizureEngine`` over randomly interleaved multi-patient
+    streams (random push sizes, sporadic polls, optional unscored tail
+    windows) and assert every vote and alarm matches the pipeline oracle
+    bit-for-bit and in per-session order.
+
+    streams    : {patient_id: (list of pool chunk indices, extra_windows)}
+    open_order : session creation order (may differ from push order)
+    """
+    cfg = program.cfg
+    rng = np.random.RandomState(seed)
+    chunks = {pid: [pool[i] for i in idxs] for pid, (idxs, _) in streams.items()}
+    full = {
+        pid: np.concatenate(
+            chunks[pid] + ([pool[0][:extra]] if extra else [])
+        )
+        for pid, (_, extra) in streams.items()
+    }
+
+    engine = api.SeizureEngine(program, max_batch=max_batch)
+    sessions = {pid: engine.open_session(pid) for pid in open_order}
+
+    # Split each stream into random-size pushes; interleave across
+    # patients in random order (per-patient order preserved: the stream
+    # is temporal).
+    remaining = {pid: [] for pid in streams}
+    for pid, wins in full.items():
+        i = 0
+        while i < wins.shape[0]:
+            n = int(rng.randint(1, 100))
+            remaining[pid].append(wins[i : i + n])
+            i += n
+    events = []
+    while any(remaining.values()):
+        pid = rng.choice([p for p, parts in remaining.items() if parts])
+        sessions[pid].push(remaining[pid].pop(0))
+        if rng.rand() < 0.3:  # sporadic polls mid-stream
+            events += engine.poll(drain=bool(rng.rand() < 0.5))
+    events += engine.poll()
+
+    got = {pid: ([], []) for pid in streams}
+    for e in scored_events(events):
+        got[e.patient_id][0].append(e.chunk_pred)
+        got[e.patient_id][1].append(e.alarm)
+    for pid in streams:
+        want_votes, want_alarms = oracle_chunks(fitted, cfg, chunks[pid])
+        assert got[pid][0] == want_votes, f"votes diverge for patient {pid}"
+        assert got[pid][1] == want_alarms, f"alarms diverge for patient {pid}"
+        extra = streams[pid][1]
+        assert sessions[pid].pending_windows == extra
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# ScoringProgram
+# ---------------------------------------------------------------------------
+
+class TestScoringProgram:
+    def test_from_fitted_shapes(self, program, fitted, small_cfg):
+        assert program.packed.n_trees == small_cfg.forest.n_trees
+        assert program.feat_mean.shape == fitted.feat_mean.shape
+        assert program.cfg == small_cfg
+
+    def test_from_fitted_packs_once(self, fitted, small_cfg, program):
+        # rotation_forest.pack caches on params identity, so building a
+        # second program from the same fitted forest reuses the packing.
+        again = api.ScoringProgram.from_fitted(fitted, small_cfg)
+        assert again.packed is program.packed
+
+    def test_save_load_roundtrip(self, program, tmp_path):
+        path = program.save(str(tmp_path), step=3)
+        assert "step_00000003" in path
+        restored = api.ScoringProgram.load(str(tmp_path))  # latest step
+        assert restored.cfg == program.cfg
+        for a, b in zip(
+            jax.tree.leaves(program._arrays()),
+            jax.tree.leaves(restored._arrays()),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_loaded_program_scores_identically(
+        self, program, chunk_pool, tmp_path
+    ):
+        program.save(str(tmp_path))
+        restored = api.ScoringProgram.load(str(tmp_path))
+        quiet, pre = chunk_pool
+        batch = np.stack([quiet, pre])
+        v1, f1, _ = api.SeizureEngine(program, max_batch=2).score_chunks(batch)
+        v2, f2, _ = api.SeizureEngine(restored, max_batch=2).score_chunks(
+            batch.copy()
+        )
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+    def test_load_missing_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            api.ScoringProgram.load(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Engine vs the pipeline oracle
+# ---------------------------------------------------------------------------
+
+class TestEngineOracle:
+    def test_streamed_session_matches_oracle(
+        self, program, fitted, small_cfg, timeline
+    ):
+        wins = np.asarray(timeline.windows)
+        want_votes, want_alarms = oracle_timeline(fitted, small_cfg, wins)
+
+        engine = api.SeizureEngine(program, max_batch=2)
+        session = engine.open_session(3)
+        # Non-chunk-aligned pushes: 37-window slices of an 818-window
+        # stream, polling as we go.
+        events = []
+        for i in range(0, wins.shape[0], 37):
+            session.push(wins[i : i + 37])
+            events += engine.poll()
+        events += engine.poll()
+        scored = scored_events(events)
+        assert [e.chunk_pred for e in scored] == want_votes
+        assert [e.alarm for e in scored] == want_alarms
+        assert [e.chunk_index for e in scored] == list(range(len(want_votes)))
+        # 818 = 13 * 60 + 38: the partial tail stays buffered, unscored.
+        assert session.pending_windows == wins.shape[0] % PER
+        assert engine.alarm_state(3) == 1
+
+    def test_alarm_raised_and_cleared_events(self, program, chunk_pool):
+        quiet, pre = chunk_pool
+        cfg = program.cfg
+        engine = api.SeizureEngine(program, max_batch=1)
+        session = engine.open_session(9)
+        for _ in range(cfg.alarm_k):
+            session.push(pre)
+        for _ in range(cfg.alarm_m):
+            session.push(quiet)
+        events = engine.poll()
+        raised = [e for e in events if isinstance(e, api.AlarmRaised)]
+        cleared = [e for e in events if isinstance(e, api.AlarmCleared)]
+        # k preictal chunks fire the alarm at chunk k-1; it clears once
+        # enough quiet chunks age the hits out of the m-deep ring.
+        assert [e.chunk_index for e in raised] == [cfg.alarm_k - 1]
+        assert len(cleared) == 1 and cleared[0].chunk_index > cfg.alarm_k - 1
+        assert engine.alarm_state(9) == 0
+
+    def test_evaluate_timeline_routes_through_engine(
+        self, fitted, small_cfg, timeline
+    ):
+        # Offline eval and serving share one code path now; the result
+        # must still match the raw oracle decision-for-decision.
+        want_votes, want_alarms = oracle_timeline(
+            fitted, small_cfg, timeline.windows
+        )
+        res = pipeline.evaluate_timeline(fitted, timeline, small_cfg)
+        assert np.asarray(res.chunk_preds).tolist() == want_votes
+        assert np.asarray(res.alarms).tolist() == want_alarms
+        assert res.window_preds.shape[0] == timeline.windows.shape[0]
+        assert float(res.lead_time_minutes) > 0
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching scheduling
+# ---------------------------------------------------------------------------
+
+class TestContinuousScheduling:
+    def test_midflight_refill_no_drain_barrier(self, program, chunk_pool):
+        """A freed slot is refilled from the queue while the other slot's
+        session is still streaming: total steps hit the ceil(total/B)
+        optimum, which is impossible with drain-and-flush batches."""
+        quiet, _ = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=2)
+        a = engine.open_session(1)   # 3 chunks
+        c = engine.open_session(2)   # 1 chunk
+        d = engine.open_session(3)   # 2 chunks (queued: no free slot yet)
+        a.push(np.concatenate([quiet] * 3))
+        c.push(quiet)
+        d.push(np.concatenate([quiet] * 2))
+        scored = scored_events(engine.poll())
+        order = [(e.patient_id, e.chunk_index) for e in scored]
+        # 6 chunks / 2 slots = 3 steps: d joins the moment c's slot frees.
+        assert engine.steps == 3
+        # d's first chunk is scored BEFORE a's last: admitted mid-flight.
+        assert order.index((3, 0)) < order.index((1, 2))
+        # Per-session order is FIFO regardless of interleaving.
+        for pid, n in ((1, 3), (2, 1), (3, 2)):
+            assert [i for p, i in order if p == pid] == list(range(n))
+
+    def test_ring_persists_across_slot_eviction(self, program, chunk_pool):
+        """With one slot and two alternating patients, every chunk evicts
+        and readmits a session; the k-of-m memory must survive the trip
+        through host ring storage bit-for-bit."""
+        quiet, pre = chunk_pool
+        cfg = program.cfg
+        engine = api.SeizureEngine(program, max_batch=1)
+        p = engine.open_session(10)
+        q = engine.open_session(11)
+        alarms_p, alarms_q = [], []
+        for _ in range(cfg.alarm_m):
+            p.push(pre)
+            q.push(quiet)
+            for e in scored_events(engine.poll()):
+                (alarms_p if e.patient_id == 10 else alarms_q).append(e.alarm)
+        k = cfg.alarm_k
+        assert alarms_p == [0] * (k - 1) + [1] * (cfg.alarm_m - k + 1)
+        assert alarms_q == [0] * cfg.alarm_m
+
+    def test_poll_without_drain_defers_partial_batch(self, program, chunk_pool):
+        quiet, _ = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=2)
+        for pid in range(3):
+            engine.open_session(pid).push(quiet)
+        first = scored_events(engine.poll(drain=False))
+        assert len(first) == 2 and engine.steps == 1  # full batch only
+        rest = scored_events(engine.poll())
+        assert len(rest) == 1  # drained (padded) tail
+
+    def test_mesh_engine_matches_unsharded(self, program, chunk_pool):
+        quiet, pre = chunk_pool
+        mesh = jax.make_mesh((1,), ("data",))
+        results = []
+        for kwargs in ({}, {"mesh": mesh}):
+            engine = api.SeizureEngine(program, max_batch=2, **kwargs)
+            s = engine.open_session(0)
+            s.push(np.concatenate([quiet, pre, pre, pre]))
+            results.append(
+                [(e.chunk_pred, e.alarm) for e in scored_events(engine.poll())]
+            )
+        assert results[0] == results[1]
+
+
+# ---------------------------------------------------------------------------
+# Interleaving oracle (seeded scenarios; the hypothesis variant in
+# test_engine_properties.py drives the same checker with drawn inputs)
+# ---------------------------------------------------------------------------
+
+class TestInterleavingOracle:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_seeded_random_interleavings(
+        self, program, fitted, chunk_pool, seed
+    ):
+        rng = np.random.RandomState(1000 + seed)
+        n_pat = int(rng.randint(1, 4))
+        streams = {
+            pid: (
+                [int(i) for i in rng.randint(0, 2, size=rng.randint(1, 4))],
+                int(rng.choice([0, 30])),
+            )
+            for pid in range(n_pat)
+        }
+        open_order = [int(p) for p in rng.permutation(list(streams))]
+        run_interleaving(
+            program, fitted, chunk_pool,
+            max_batch=int(rng.randint(1, 3)),
+            streams=streams, open_order=open_order, seed=seed,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Session lifecycle
+# ---------------------------------------------------------------------------
+
+class TestSessionLifecycle:
+    def test_duplicate_open_raises(self, program):
+        engine = api.SeizureEngine(program, max_batch=1)
+        engine.open_session(1)
+        with pytest.raises(ValueError, match="already open"):
+            engine.open_session(1)
+
+    def test_close_discards_state_and_frees_patient(self, program, chunk_pool):
+        _, pre = chunk_pool
+        cfg = program.cfg
+        engine = api.SeizureEngine(program, max_batch=1)
+        s = engine.open_session(5)
+        for _ in range(cfg.alarm_m):
+            s.push(pre)
+        engine.poll()
+        assert engine.alarm_state(5) == 1
+        engine.close_session(5)
+        assert engine.alarm_state(5) == 0
+        with pytest.raises(RuntimeError, match="closed"):
+            s.push(pre)
+        engine.open_session(5)  # patient id is reusable after close
+
+    def test_push_rejects_malformed_windows(self, program):
+        engine = api.SeizureEngine(program, max_batch=1)
+        s = engine.open_session(0)
+        with pytest.raises(ValueError, match="windows shape"):
+            s.push(np.zeros((4, 2, 128), np.float32))
+
+    def test_push_does_not_alias_caller_buffer(self, program, chunk_pool):
+        # A streaming caller may reuse its acquisition buffer between
+        # push and poll; queued chunks must capture the pushed values.
+        quiet, pre = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=1)
+        ref = engine.open_session(0)
+        ref.push(pre)
+        want = scored_events(engine.poll())[0].chunk_pred
+        buf = pre.copy()
+        s = engine.open_session(1)
+        s.push(buf)
+        buf[:] = quiet  # caller reuses the buffer before poll
+        got = scored_events(engine.poll())[0].chunk_pred
+        assert got == want
+
+    def test_partial_push_buffers_until_chunk_completes(
+        self, program, chunk_pool
+    ):
+        quiet, _ = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=1)
+        s = engine.open_session(0)
+        s.push(quiet[:37])
+        assert engine.poll() == []
+        assert s.pending_windows == 37 and s.pending_chunks == 0
+        s.push(quiet[37:])
+        assert s.pending_chunks == 1
+        assert len(scored_events(engine.poll())) == 1
+        assert s.pending_windows == 0

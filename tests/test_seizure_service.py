@@ -115,7 +115,34 @@ class TestBatcherState:
         svc.reset_patient(5)
         assert svc.alarm_state(5) == 0
 
+    def test_reset_patient_keeps_queued_chunks(self, fitted, small_cfg, timeline):
+        # PR-1 semantics: reset clears the alarm ring only; a chunk that
+        # was submitted before the reset still gets scored (fresh ring).
+        pre = _chunks(timeline)[-1]
+        svc = SeizureScoringService(fitted, small_cfg, max_batch=1)
+        svc.submit(5, pre)
+        svc.reset_patient(5)
+        results = svc.flush()
+        assert [r.patient_id for r in results] == [5]
+        assert results[0].alarm == 0  # one vote cannot fire k-of-m
+
     def test_rejects_malformed_chunk(self, fitted, small_cfg):
         svc = SeizureScoringService(fitted, small_cfg)
         with pytest.raises(ValueError, match="chunk shape"):
             svc.submit(1, np.zeros((PER, 2, 128), np.float32))
+
+
+class TestDeprecationShim:
+    def test_constructor_warns(self, fitted, small_cfg):
+        with pytest.warns(DeprecationWarning, match="SeizureEngine"):
+            SeizureScoringService(fitted, small_cfg, max_batch=1)
+
+    def test_shim_is_backed_by_engine(self, fitted, small_cfg, timeline):
+        from repro.serving import api
+
+        svc = SeizureScoringService(fitted, small_cfg, max_batch=2)
+        assert isinstance(svc.engine, api.SeizureEngine)
+        chunk = _chunks(timeline)[-1]
+        r = svc.score(1, chunk)
+        # the shim's alarm state IS the engine session's on-device ring
+        assert svc.alarm_state(1) == svc.engine.alarm_state(1) == r.alarm

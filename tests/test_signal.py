@@ -245,6 +245,29 @@ class TestPipeline:
         # no alarm during the first interictal hour (7 full chunks)
         assert int(res.alarms[:6].sum()) == 0
 
+    def test_process_windows_shorter_than_one_chunk(self, small_cfg):
+        # Regression: recordings with w < WINDOWS_PER_MATRIX (pad > w)
+        # used to crash the wrap-padding reshape in process_windows; the
+        # cyclic tiling must fill a whole denoising matrix from any w.
+        wins = eeg_data.generate_windows(
+            jax.random.PRNGKey(11), jnp.asarray(3), eeg_data.INTERICTAL, 10
+        )
+        feats = pipeline.process_windows(wins, small_cfg)
+        assert feats.shape[0] == 10
+        assert bool(jnp.isfinite(feats).all())
+
+    def test_short_recording_wrap_equals_concat_padding(self, small_cfg):
+        # For pad <= w the tiling must reproduce the original
+        # concatenate([windows, windows[:pad]]) wrap exactly.
+        wins = eeg_data.generate_windows(
+            jax.random.PRNGKey(12), jnp.asarray(3), eeg_data.INTERICTAL, 70
+        )
+        per = eeg_data.WINDOWS_PER_MATRIX
+        w, c, n = wins.shape
+        tiled = jnp.resize(wins, (2 * per, c, n))
+        concat = jnp.concatenate([wins, wins[: 2 * per - w]], axis=0)
+        np.testing.assert_array_equal(np.asarray(tiled), np.asarray(concat))
+
     def test_mapreduce_features_match_serial(self, small_cfg):
         wins = eeg_data.generate_windows(
             jax.random.PRNGKey(5), jnp.asarray(3), eeg_data.INTERICTAL, 8
