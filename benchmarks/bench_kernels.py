@@ -13,6 +13,7 @@ from repro.core import rotation_forest as rf
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.forest import ops as forest_ops
 from repro.kernels.gram import ops as gram_ops
+from repro.kernels.histogram import ops as hist_ops
 from repro.kernels.wpd import ops as wpd_ops
 
 
@@ -53,6 +54,32 @@ def run(rows: Rows, smoke: bool = False) -> None:
     )
     rows.add("kernels/forest/interpret_err",
              float(jnp.max(jnp.abs(p_ref - p_k))), "pallas vs ref (exact)")
+
+    # Class-histogram scatter-add (the train-side grower hot loop)
+    hn, hf, buckets = (256, 12, 64) if smoke else (2048, 96, 512)
+    kc, ky2, kw = jax.random.split(key, 3)
+    codes = jax.random.randint(kc, (4, hn, hf), 0, buckets)
+    yy = jax.random.randint(ky2, (hn,), 0, 2)
+    wy = (
+        jax.random.uniform(kw, (4, hn))[..., None]
+        * jax.nn.one_hot(yy, 2, dtype=jnp.float32)
+    )
+    t = time_fn(
+        lambda: hist_ops.class_histogram(
+            codes, wy, n_buckets=buckets, use_pallas=False
+        ),
+        iters=iters,
+    )
+    rows.add(f"kernels/histogram/ref_{hn}x{hf}_b{buckets}", t,
+             "one-hot matmul class histogram (lax.map oracle), T=4")
+    h_ref = hist_ops.class_histogram(
+        codes, wy, n_buckets=buckets, use_pallas=False
+    )
+    h_k = hist_ops.class_histogram(
+        codes, wy, n_buckets=buckets, use_pallas=True, interpret=True
+    )
+    rows.add("kernels/histogram/interpret_err",
+             float(jnp.max(jnp.abs(h_ref - h_k))), "pallas vs ref (exact)")
 
     # Gram (X^T X for MSPCA / rotation PCA)
     m = 256 if smoke else 2048

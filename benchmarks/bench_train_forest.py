@@ -1,0 +1,109 @@
+"""Training throughput: the paper's training-time claim, reproduced.
+
+Comparisons on one synthetic feature set:
+
+  * ``fused``        -- ``rotation_forest.fit``: ONE level-synchronous
+    histogram pass grows the whole forest
+    (``decision_tree.fit_forest_binned``).
+  * ``pertree_loop`` -- a Python loop of single-tree fits (one jitted
+    dispatch per tree): the serial-Weka / dispatch-overhead worst case,
+    mirroring bench_serving's per-tree inference row. The fused / loop
+    ratio is recorded for the trajectory; CI gates the absolute fused
+    throughput row (the ratio hovers near 1.0 on CPU and is too noisy
+    to gate -- see compare_baseline.DEFAULT_ROWS).
+  * ``pertree_vmap`` -- ``rotation_forest.fit_per_tree``: vmap of
+    single-tree fits. XLA already batches the vmapped scatter-adds, so
+    this is expected to track the fused grower closely on CPU -- the
+    fused formulation's additional win is routing its explicit
+    histogram through the Pallas kernel on TPU. Recorded, not gated.
+  * ``mapreduce``    -- ``forest_trainer.fit_mapreduce`` shard scaling
+    via the run_local emulation. On this 1-CPU container the wall-clock
+    is structural (shards share the device); the paper's multi-machine
+    training-time table is the trajectory this row records, and
+    launch/train_forest.py --devices N drives the real shard_map job.
+
+  PYTHONPATH=src python -m benchmarks.bench_train_forest [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, time_fn
+from repro.core import forest_trainer as ft
+from repro.core import rotation_forest as rf
+
+
+def run(rows: Rows, smoke: bool = False) -> None:
+    # Many trees on few rows is the dispatch-bound regime the fusion
+    # targets; CI gates the fused throughput row, so keep 3 reps
+    # (median) even in smoke mode -- the shapes are small enough that
+    # reps are cheap.
+    n, f = (256, 24) if smoke else (4096, 96)
+    cfg = rf.RotationForestConfig(
+        n_trees=16, n_subsets=3,
+        depth=5 if smoke else 6, n_classes=2,
+        n_bins=16 if smoke else 32,
+    )
+    iters = 3
+    kx, ky, kfit = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(kx, (n, f), jnp.float32)
+    w = jax.random.normal(ky, (f,))
+    y = (x @ w > 0).astype(jnp.int32)
+
+    t_fused = time_fn(
+        lambda: rf.fit(kfit, x, y, cfg), iters=iters
+    ) / 1e6  # us -> s
+    rows.add("training/forest/fused_rows_per_s", n / t_fused,
+             f"{n} rows x {cfg.n_trees} trees in {t_fused*1e3:.1f}ms "
+             "(fit_forest_binned)")
+
+    one_tree = cfg._replace(n_trees=1)
+    tree_keys = jax.random.split(kfit, cfg.n_trees)
+
+    def pertree_loop():
+        return [rf.fit(k, x, y, one_tree) for k in tree_keys]
+
+    t_loop = time_fn(pertree_loop, iters=iters) / 1e6
+    rows.add("training/forest/pertree_loop_rows_per_s", n / t_loop,
+             f"{n} rows in {t_loop*1e3:.1f}ms "
+             f"({cfg.n_trees} single-tree dispatches)")
+    rows.add("training/forest/fused_speedup", t_loop / t_fused,
+             "per-tree-loop grower time / fused grower time "
+             "(>1 = fused wins)")
+
+    t_vmap = time_fn(
+        lambda: rf.fit_per_tree(kfit, x, y, cfg), iters=iters
+    ) / 1e6
+    rows.add("training/forest/pertree_vmap_rows_per_s", n / t_vmap,
+             f"{n} rows in {t_vmap*1e3:.1f}ms (vmap of fit_binned)")
+    rows.add("training/forest/fused_speedup_vs_vmap", t_vmap / t_fused,
+             "vmap-grower time / fused time (~1 on CPU: XLA batches the "
+             "vmapped scatters; the kernel routing is the TPU-side win)")
+
+    # Shard scaling of the distributed fit (paper's training-time table).
+    for shards in (1, 2) if smoke else (1, 2, 4):
+        t_mr = time_fn(
+            lambda s=shards: ft.fit_mapreduce(
+                kfit, x, y, cfg, n_shards=s
+            ),
+            iters=iters,
+        ) / 1e6
+        rows.add(f"training/forest/mapreduce_shards{shards}_rows_per_s",
+                 n / t_mr,
+                 f"{cfg.n_trees} union trees over {shards} map shards, "
+                 f"{t_mr*1e3:.1f}ms (run_local emulation)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = Rows()
+    run(rows, smoke=args.smoke)
+    if args.json:
+        rows.to_json(args.json, smoke=args.smoke)

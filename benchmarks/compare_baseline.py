@@ -25,11 +25,14 @@ import sys
 
 # Gate the fused serving row (absolute windows/s -- refresh the baseline
 # when runner hardware changes) plus its hardware-independent fused/
-# unfused ratio. The staggered rows are recorded for the trajectory but
-# swing too much at 1 smoke rep to gate at 30%.
+# unfused ratio, and the training-side twin: the fused-grower training
+# throughput. The speedup-vs-loop/vmap and shard-scaling training rows
+# are recorded for the trajectory but hover near 1.0 on CPU (XLA batches
+# the vmapped scatters) and swing too much run-to-run to gate at 30%.
 DEFAULT_ROWS = [
     "serving/seizure/fused_windows_per_s",
     "serving/seizure/fused_speedup",
+    "training/forest/fused_rows_per_s",
 ]
 
 

@@ -31,7 +31,8 @@ def main() -> None:
     from benchmarks import (bench_dataset_size, bench_execution_time,
                             bench_kernels, bench_mspca_denoise,
                             bench_prediction_timeline, bench_serving,
-                            bench_training_accuracy, roofline)
+                            bench_train_forest, bench_training_accuracy,
+                            roofline)
     from benchmarks.common import Rows
 
     benches = [
@@ -42,6 +43,7 @@ def main() -> None:
         ("bench_mspca_denoise", bench_mspca_denoise.run),
         ("bench_kernels", bench_kernels.run),
         ("bench_serving", bench_serving.run),
+        ("bench_train_forest", bench_train_forest.run),
         ("roofline", roofline.run),
     ]
     rows = Rows()

@@ -6,9 +6,22 @@ an accelerator; we instead build *histogram* trees level-synchronously
 accelerator GBDT): features are quantile-binned to ``n_bins`` integer
 codes, and at each depth every node's best (feature, threshold) split is
 found from a weighted class histogram computed with one scatter-add over
-the whole dataset. Everything is static-shaped, so a single tree fit is
-jit-able and a forest is a ``vmap`` over trees -- which is exactly what
-the MapReduce layer shards across devices.
+the whole dataset.
+
+Two growers share the split logic:
+
+  * ``fit_binned``        -- one tree. Kept as the reference oracle.
+  * ``fit_forest_binned`` -- ALL T trees of a forest at once over
+    (T, N, F) binned codes: one (T, F, nodes*bins, C) histogram
+    scatter-add per level instead of T of them (optionally the
+    ``kernels.histogram`` Pallas kernel), one argmax, one routing step.
+    This is the production grower ``rotation_forest.fit`` sits on; it is
+    bit-identical to a per-tree ``fit_binned`` sweep because every
+    per-tree intermediate is computed by the same ops in the same order,
+    just with a leading tree axis.
+
+Everything is static-shaped, so fits are jit-able and the MapReduce
+layer can shard whole sub-forest fits across devices.
 
 Heap node indexing: root = 1, children of i = (2i, 2i+1); depth-D tree has
 2**D leaves with heap ids [2**D, 2**(D+1)).
@@ -21,6 +34,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.histogram import ops as hist_ops
 
 
 class TreeParams(NamedTuple):
@@ -169,6 +184,118 @@ def fit_binned(
 
     if bin_edges is None:
         bin_edges = jnp.zeros((f, n_bins - 1), jnp.float32)
+    return TreeParams(split_feature, split_bin, leaf_probs, bin_edges)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "n_classes", "n_bins", "min_samples", "use_kernel"),
+)
+def fit_forest_binned(
+    xb: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    *,
+    depth: int,
+    n_classes: int,
+    n_bins: int,
+    min_samples: int = 2,
+    bin_edges: jax.Array | None = None,
+    use_kernel: bool = False,
+) -> TreeParams:
+    """Grow ALL T trees level-synchronously on pre-binned features.
+
+    xb : (T, N, F) int32 bin codes (tree t sees its own rotated binning).
+    y  : (N,) int32 labels, shared by every tree.
+    w  : (T, N) float32 per-tree sample weights (0 masks a sample out --
+         per-tree bootstrap subsampling stays static-shaped).
+
+    One fused histogram per level for the whole forest: a single
+    (T, F, nodes*bins, C) scatter-add (or the ``kernels.histogram``
+    Pallas matmul formulation when ``use_kernel``), then every tree's
+    every node picks its split from one argmax. Returns ``TreeParams``
+    whose fields all carry a leading T axis -- bit-identical to stacking
+    T independent ``fit_binned`` fits (``use_kernel`` may flip f32
+    low-order histogram bits; split decisions only differ on exact gain
+    ties).
+    """
+    t, n, f = xb.shape
+    max_nodes = 2**depth
+
+    split_feature = jnp.full((t, max_nodes), -1, jnp.int32)
+    split_bin = jnp.full((t, max_nodes), n_bins, jnp.int32)
+    assignment = jnp.ones((t, n), jnp.int32)  # heap id per (tree, sample)
+
+    for level in range(depth):
+        nodes_at = 2**level
+        local = assignment - nodes_at  # (T, N) in [0, nodes_at)
+
+        # ---- histogram: (T, F, nodes_at * n_bins, C) in one pass ----
+        if use_kernel:
+            hist = hist_ops.level_histogram(
+                xb, local, y, w,
+                nodes_at=nodes_at, n_bins=n_bins, n_classes=n_classes,
+                use_pallas=True,
+            )
+        else:
+            flat_idx = local[:, :, None] * n_bins + xb  # (T, N, F)
+            hist = jnp.zeros((t, f, nodes_at * n_bins, n_classes), jnp.float32)
+            hist = hist.at[
+                jnp.arange(t)[:, None, None],
+                jnp.arange(f)[None, None, :],
+                flat_idx,
+                y[None, :, None],
+            ].add(w[:, :, None])
+        hist = hist.reshape(t, f, nodes_at, n_bins, n_classes)
+
+        parent = jnp.sum(hist, axis=3)       # (T, F, nodes, C)
+        left_cum = jnp.cumsum(hist, axis=3)  # split at bin b => bins <= b left
+        gain = _gini_gain(left_cum, parent[:, :, :, None, :])  # (T, F, nodes, bins)
+        gain = gain.at[..., -1].set(-jnp.inf)  # degenerate everything-left
+        n_left = jnp.sum(left_cum, -1)
+        n_tot = jnp.sum(parent, -1)[..., None]
+        valid = (n_left > 0) & (n_tot - n_left > 0)
+        gain = jnp.where(valid, gain, -jnp.inf)
+
+        flat_gain = gain.transpose(0, 2, 1, 3).reshape(t, nodes_at, f * n_bins)
+        best = jnp.argmax(flat_gain, axis=2)
+        best_gain = jnp.take_along_axis(flat_gain, best[..., None], axis=2)[..., 0]
+        best_feat = (best // n_bins).astype(jnp.int32)
+        best_bin = (best % n_bins).astype(jnp.int32)
+
+        node_n = jnp.sum(parent[:, 0], -1)  # (T, nodes)
+        node_gini = 1.0 - jnp.sum(
+            (parent[:, 0] / jnp.maximum(node_n[..., None], 1e-12)) ** 2, -1
+        )
+        do_split = (node_n >= min_samples) & jnp.isfinite(best_gain) & (node_gini > 1e-9)
+        best_feat = jnp.where(do_split, best_feat, -1)
+        best_bin = jnp.where(do_split, best_bin, n_bins)
+
+        heap_ids = nodes_at + jnp.arange(nodes_at)
+        split_feature = split_feature.at[:, heap_ids].set(best_feat)
+        split_bin = split_bin.at[:, heap_ids].set(best_bin)
+
+        # Route every tree's samples through its own fresh splits.
+        feat_at = jnp.take_along_axis(best_feat, local, axis=1)  # (T, N)
+        bin_at = jnp.take_along_axis(best_bin, local, axis=1)
+        samp_feat = jnp.where(feat_at < 0, 0, feat_at)
+        val = jnp.take_along_axis(xb, samp_feat[:, :, None], axis=2)[..., 0]
+        go_right = (val > bin_at).astype(jnp.int32)
+        assignment = 2 * assignment + go_right
+
+    # ---- leaf class distributions (one scatter for the whole forest) ----
+    leaf_local = assignment - 2**depth  # (T, N)
+    leaf_hist = jnp.zeros((t, 2**depth, n_classes), jnp.float32)
+    leaf_hist = leaf_hist.at[
+        jnp.arange(t)[:, None], leaf_local, y[None, :]
+    ].add(w)
+    prior = jnp.sum(leaf_hist, axis=1)  # (T, C)
+    prior = prior / jnp.maximum(jnp.sum(prior, -1, keepdims=True), 1e-12)
+    leaf_n = jnp.sum(leaf_hist, -1, keepdims=True)
+    leaf_probs = (leaf_hist + 1e-3 * prior[:, None, :]) / (leaf_n + 1e-3)
+
+    if bin_edges is None:
+        bin_edges = jnp.zeros((t, f, n_bins - 1), jnp.float32)
     return TreeParams(split_feature, split_bin, leaf_probs, bin_edges)
 
 

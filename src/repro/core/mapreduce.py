@@ -143,14 +143,18 @@ class MapReduce:
     def run_local(self, n_shards: int, *inputs, replicated_inputs: tuple = ()):
         """vmap emulation: split leading axes into ``n_shards``, vmap the
         map fn, apply the reduce monoid with jnp ops. Semantically equal to
-        ``run`` for deterministic map fns."""
+        ``run`` for deterministic map fns. The vmap carries
+        ``self.axis_name``, so map fns may use collectives (``psum``,
+        ``all_gather``, ...) over it exactly as they would inside
+        ``shard_map``."""
 
         def split(t):
             return t.reshape((n_shards, t.shape[0] // n_shards) + t.shape[1:])
 
         shards = tuple(jax.tree.map(split, t) for t in inputs)
         mapped = jax.vmap(
-            lambda *xs: self.map_fn(*xs, *replicated_inputs)
+            lambda *xs: self.map_fn(*xs, *replicated_inputs),
+            axis_name=self.axis_name,
         )(*shards)
         return _local_reduce(self.reduce_fn, mapped)
 
@@ -181,19 +185,45 @@ def _local_reduce(reduce_fn: ReduceFn, mapped):
 def shuffle_by_key(values: jax.Array, keys: jax.Array, axis_name: str, n_shards: int):
     """Inside shard_map: redistribute rows so that row i lands on shard
     ``keys[i] % n_shards``. Static-shaped all_to_all: each shard sends an
-    equal-sized bucket to every other shard (rows are sorted into buckets
-    locally; bucket overflow is dropped, underflow zero-padded -- callers
-    pick bucket sizes with headroom).
+    equal-sized bucket of ``rows_per_shard // n_shards`` rows to every
+    other shard.
+
+    Headroom contract (enforced): ``rows_per_shard % n_shards == 0`` --
+    a ragged row count cannot fill equal buckets and is rejected rather
+    than silently truncated. Even with the contract satisfied, key skew
+    can overflow a destination: a shard keying MORE than ``bucket`` rows
+    to one destination keeps the first ``bucket`` of them (stable local
+    order) and DROPS the excess; destinations receiving fewer are
+    zero-padded. Callers pick ``rows_per_shard`` with headroom for their
+    worst-case skew (Hadoop's fixed-size spill buckets have the same
+    failure mode). The pre-guard implementation packed the sorted rows
+    into buckets regardless of destination boundaries, silently
+    MISROUTING every overflow row into the next shard's bucket.
     """
     rows_per_shard = values.shape[0]
+    if rows_per_shard % n_shards != 0:
+        raise ValueError(
+            f"shuffle_by_key: rows_per_shard={rows_per_shard} not divisible "
+            f"by n_shards={n_shards}; equal send buckets would drop the "
+            f"{rows_per_shard % n_shards} trailing rows silently. Pad rows "
+            "upstream to a multiple of n_shards."
+        )
     bucket = rows_per_shard // n_shards
     dest = keys % n_shards
-    order = jnp.argsort(dest)
+    order = jnp.argsort(dest)  # stable: preserves local row order per dest
+    sorted_dest = dest[order]
     values_sorted = values[order]
-    # (n_shards, bucket, ...) send buckets; all_to_all swaps the leading axis.
-    send = values_sorted[: n_shards * bucket].reshape(
-        (n_shards, bucket) + values.shape[1:]
+    # Rank of each row within its destination group; rows past the
+    # bucket capacity scatter out of bounds and are dropped.
+    group_start = jnp.searchsorted(sorted_dest, jnp.arange(n_shards))
+    pos = jnp.arange(rows_per_shard) - group_start[sorted_dest]
+    slot = jnp.where(
+        pos < bucket, sorted_dest * bucket + pos, rows_per_shard
     )
+    send = jnp.zeros_like(values)
+    send = send.at[slot].set(values_sorted, mode="drop")
+    # (n_shards, bucket, ...) send buckets; all_to_all swaps the leading axis.
+    send = send.reshape((n_shards, bucket) + values.shape[1:])
     recv = jax.lax.all_to_all(send, axis_name, 0, 0, tiled=False)
     return recv.reshape((n_shards * bucket,) + values.shape[1:])
 

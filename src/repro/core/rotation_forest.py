@@ -33,6 +33,9 @@ class RotationForestConfig(NamedTuple):
     n_bins: int = 32
     bootstrap_frac: float = 0.75  # paper/ Weka default: 75% instance subsample
     min_samples: int = 2
+    # Route the grower's per-level histogram through the Pallas
+    # scatter-add kernel (kernels/histogram; interpret mode off-TPU).
+    use_hist_kernel: bool = False
 
 
 class RotationForestParams(NamedTuple):
@@ -88,7 +91,15 @@ def _build_rotation(key: jax.Array, x: jax.Array, cfg: RotationForestConfig) -> 
     return rot_p[inv][:, inv]
 
 
-def _fit_one(key: jax.Array, x: jax.Array, y: jax.Array, cfg: RotationForestConfig):
+def _prepare_one(key: jax.Array, x: jax.Array, y: jax.Array, cfg: RotationForestConfig):
+    """One tree's data prep: rotation, bootstrap mask, rotated binning.
+
+    Split out of the fit so the expensive part -- the level-synchronous
+    histogram grow -- can run once for the WHOLE forest
+    (``dt.fit_forest_binned``) instead of per tree. The RNG schedule
+    (split into rotation key + bootstrap key) is the historical
+    ``_fit_one`` stream, so fits are reproducible across the refactor.
+    """
     rot_key, tree_key = jax.random.split(key)
     rot = _build_rotation(rot_key, x, cfg)
     xr = x @ rot
@@ -99,6 +110,12 @@ def _fit_one(key: jax.Array, x: jax.Array, y: jax.Array, cfg: RotationForestConf
     ).astype(jnp.float32)
     edges = dt.compute_bin_edges(xr, cfg.n_bins)
     xb = dt.bin_features(xr, edges)
+    return rot, xb, w, edges
+
+
+def _fit_one(key: jax.Array, x: jax.Array, y: jax.Array, cfg: RotationForestConfig):
+    """Per-tree oracle (the pre-fusion path): kept for tests/benchmarks."""
+    rot, xb, w, edges = _prepare_one(key, x, y, cfg)
     tree = dt.fit_binned(
         xb, y, w,
         depth=cfg.depth, n_classes=cfg.n_classes, n_bins=cfg.n_bins,
@@ -107,19 +124,53 @@ def _fit_one(key: jax.Array, x: jax.Array, y: jax.Array, cfg: RotationForestConf
     return rot, tree
 
 
+def _pad_features(x: jax.Array, n_subsets: int) -> jax.Array:
+    if x.shape[1] % n_subsets != 0:
+        pad = n_subsets - x.shape[1] % n_subsets
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def fit(key: jax.Array, x: jax.Array, y: jax.Array, cfg: RotationForestConfig) -> RotationForestParams:
-    """Fit ``cfg.n_trees`` rotation trees (vmapped over tree RNGs).
+    """Fit ``cfg.n_trees`` rotation trees with the fused forest grower.
+
+    Per-tree work (rotation build, bootstrap, quantile binning) is
+    vmapped over tree RNGs; the tree growing itself is ONE
+    ``dt.fit_forest_binned`` call -- a single (T, F, nodes*bins, C)
+    histogram per level for the whole forest rather than one histogram
+    per level per tree. Bit-identical to the per-tree ``fit_per_tree``
+    oracle on the same key.
 
     x : (N, F) float features -- F must be divisible by ``cfg.n_subsets``
         (pad features with zeros upstream otherwise; ``features.pad_to``).
     y : (N,) int labels in [0, n_classes).
     """
-    x = x.astype(jnp.float32)
+    x = _pad_features(x.astype(jnp.float32), cfg.n_subsets)
     y = y.astype(jnp.int32)
-    if x.shape[1] % cfg.n_subsets != 0:
-        pad = cfg.n_subsets - x.shape[1] % cfg.n_subsets
-        x = jnp.pad(x, ((0, 0), (0, pad)))
+    keys = jax.random.split(key, cfg.n_trees)
+    rots, xbs, ws, edges = jax.vmap(
+        lambda k: _prepare_one(k, x, y, cfg)
+    )(keys)
+    trees = dt.fit_forest_binned(
+        xbs, y, ws,
+        depth=cfg.depth, n_classes=cfg.n_classes, n_bins=cfg.n_bins,
+        min_samples=cfg.min_samples, bin_edges=edges,
+        use_kernel=cfg.use_hist_kernel,
+    )
+    return RotationForestParams(rotation=rots, trees=trees)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fit_per_tree(
+    key: jax.Array, x: jax.Array, y: jax.Array, cfg: RotationForestConfig
+) -> RotationForestParams:
+    """Reference (and benchmark-baseline) grower: vmap of independent
+    single-tree fits -- T histograms per level. Semantically identical to
+    ``fit``; kept as the oracle the fused grower is tested against and
+    as the per-tree baseline the training benchmark times."""
+    x = _pad_features(x.astype(jnp.float32), cfg.n_subsets)
+    y = y.astype(jnp.int32)
     keys = jax.random.split(key, cfg.n_trees)
     rots, trees = jax.vmap(lambda k: _fit_one(k, x, y, cfg))(keys)
     return RotationForestParams(rotation=rots, trees=trees)

@@ -1,0 +1,86 @@
+"""Public class-histogram op: the train-side scatter-add, fused.
+
+``class_histogram`` is the generic bucketed weighted class histogram the
+level-synchronous grower (``core.decision_tree.fit_forest_binned``)
+calls once per level; ``level_histogram`` is the grower-shaped wrapper
+that builds the flat (node-local * n_bins + bin) bucket ids and the
+``w * onehot(y)`` class mass itself.
+
+Routing mirrors ``kernels.forest.ops``: ``use_pallas=None`` picks the
+Pallas kernel on TPU and the pure-JAX reference elsewhere; explicitly
+``True`` off-TPU runs the kernel in interpret mode, which is bit-exact
+against ``ref.class_histogram`` (both consume samples in ascending
+``block_n`` slabs).
+
+This module deliberately imports nothing from ``repro.core`` (the core
+imports *us*).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.histogram import kernel as _kernel
+from repro.kernels.histogram import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_buckets", "use_pallas", "block_n", "interpret"),
+)
+def class_histogram(
+    codes: jax.Array,
+    wy: jax.Array,
+    *,
+    n_buckets: int,
+    use_pallas: bool | None = None,
+    block_n: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """codes (T, N, F) int32 bucket ids in [0, n_buckets) (out-of-range
+    ignored), wy (T, N, C) f32 class mass -> (T, F, n_buckets, C)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        if interpret is None:
+            interpret = not _on_tpu()
+        return _kernel.class_histogram(
+            codes, wy, n_buckets=n_buckets, block_n=block_n,
+            interpret=interpret,
+        )
+    return _ref.class_histogram(codes, wy, n_buckets, block_n=block_n)
+
+
+def level_histogram(
+    xb: jax.Array,
+    local: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    *,
+    nodes_at: int,
+    n_bins: int,
+    n_classes: int,
+    use_pallas: bool | None = None,
+    block_n: int = 256,
+) -> jax.Array:
+    """One grower level's histogram over all trees at once.
+
+    xb    : (T, N, F) int32 bin codes.
+    local : (T, N) int32 node-local ids in [0, nodes_at).
+    y     : (N,) int32 labels shared by every tree.
+    w     : (T, N) f32 per-tree sample weights.
+    Returns (T, F, nodes_at * n_bins, C).
+    """
+    codes = local[:, :, None] * n_bins + xb
+    wy = w[..., None] * jax.nn.one_hot(y, n_classes, dtype=jnp.float32)
+    return class_histogram(
+        codes, wy, n_buckets=nodes_at * n_bins, use_pallas=use_pallas,
+        block_n=block_n,
+    )

@@ -8,7 +8,6 @@ from repro.serving.api import (
 )
 from repro.serving.continuous import ContinuousEngine, Request
 from repro.serving.engine import ServeEngine, make_serve_step
-from repro.serving.seizure_service import ScoreResult, SeizureScoringService
 
 __all__ = [
     "ServeEngine",
@@ -22,7 +21,4 @@ __all__ = [
     "ChunkScored",
     "AlarmRaised",
     "AlarmCleared",
-    # deprecated PR-1 facade
-    "SeizureScoringService",
-    "ScoreResult",
 ]

@@ -176,6 +176,42 @@ def make_training_set(
     return Recording(windows=windows, labels=labels)
 
 
+def stratify_chunks(recording: Recording, per: int = WINDOWS_PER_MATRIX) -> Recording:
+    """Reorder whole ``per``-window chunks so classes spread evenly.
+
+    ``make_training_set`` lays out all interictal windows then all
+    preictal ones; slicing THAT into contiguous MapReduce shards hands
+    each map task a single-class shard and its sub-forest degenerates to
+    a constant vote. Each class's chunks are placed at even fractional
+    strides ((i + 0.5) / k_class) and the combined order sorts those
+    positions, so contiguous chunk-aligned shards stay as class-mixed as
+    the class ratio allows even when counts are imbalanced (a plain
+    round-robin would dump the majority surplus at the tail, leaving
+    trailing shards single-class). Chunks are never split (MSPCA
+    denoising needs intact 8-minute matrices); trailing sub-chunk
+    windows keep their position at the end.
+    """
+    w = recording.windows.shape[0]
+    n = w // per
+    if n < 2:
+        return recording
+    import numpy as np
+    labs = np.asarray(recording.labels[: n * per]).reshape(n, per)
+    major = labs.mean(axis=1) > 0.5
+    by_class = [np.where(~major)[0], np.where(major)[0]]
+    idx = np.concatenate([c for c in by_class if len(c)])
+    pos = np.concatenate(
+        [(np.arange(len(c)) + 0.5) / len(c) for c in by_class if len(c)]
+    )
+    order = idx[np.argsort(pos, kind="stable")].astype(np.int32)
+    win_idx = (order[:, None] * per + np.arange(per)[None, :]).reshape(-1)
+    win_idx = np.concatenate([win_idx, np.arange(n * per, w)])
+    idx = jnp.asarray(win_idx)
+    return Recording(
+        windows=recording.windows[idx], labels=recording.labels[idx]
+    )
+
+
 def make_test_timeline(
     key: jax.Array,
     patient_id: int,

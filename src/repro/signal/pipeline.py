@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import forest_trainer
 from repro.core import mapreduce as mr
 from repro.core import rotation_forest as rf
 from repro.signal import eeg_data, features, mspca
@@ -103,8 +104,47 @@ def process_recording_mapreduce(
 # ---------------------------------------------------------------------------
 
 def fit(
-    key: jax.Array, recording: eeg_data.Recording, cfg: PipelineConfig
+    key: jax.Array,
+    recording: eeg_data.Recording,
+    cfg: PipelineConfig,
+    *,
+    mesh=None,
+    n_shards: int | None = None,
 ) -> FittedPipeline:
+    """Train the full pipeline: features -> z-score -> rotation forest.
+
+    Default: single-device, whole-recording fit. Pass ``mesh`` (SPMD
+    over its ``data`` axis) or ``n_shards`` (bit-identical vmap
+    emulation) to train MapReduce-style instead: each shard denoises,
+    featurizes, and fits a sub-forest on its own slice of windows (the
+    map -- feature extraction rides inside the map task), feature
+    moments are psum'd so every shard normalizes with GLOBAL statistics,
+    and the ensemble is the union of the sub-forests (the reduce). With
+    ``denoise`` on, shard boundaries MUST align with
+    ``eeg_data.WINDOWS_PER_MATRIX`` (enforced) so each shard denoises
+    whole 8-minute matrices instead of wrap-tiling a partial one.
+    """
+    if mesh is not None or n_shards is not None:
+        shards = mesh.shape["data"] if mesh is not None else int(n_shards)
+        w = recording.windows.shape[0]
+        per = eeg_data.WINDOWS_PER_MATRIX
+        if cfg.denoise and w % shards == 0 and (w // shards) % per != 0:
+            raise ValueError(
+                f"{w} windows over {shards} shards gives {w // shards} "
+                f"windows per shard, not a multiple of "
+                f"WINDOWS_PER_MATRIX={per}: each shard would wrap-tile a "
+                "partial 8-minute denoise matrix and silently train on "
+                "duplicated data. Align shard boundaries to whole chunks "
+                "(or set denoise=False)."
+            )
+        res = forest_trainer.fit_mapreduce(
+            key, recording.windows, recording.labels, cfg.forest,
+            mesh=mesh, n_shards=n_shards,
+            feature_fn=lambda wins: process_windows(wins, cfg),
+        )
+        return FittedPipeline(
+            forest=res.forest, feat_mean=res.feat_mean, feat_std=res.feat_std
+        )
     feats = process_windows(recording.windows, cfg)
     feats, mean, std = features.normalize(feats)
     forest = rf.fit(key, feats, recording.labels, cfg.forest)
@@ -147,9 +187,43 @@ class TimelineResult(NamedTuple):
     window_preds: jax.Array
     chunk_preds: jax.Array
     alarms: jax.Array
-    # Minutes before the true seizure onset at which the first alarm fired
-    # (negative = never fired / fired after onset).
+    # Minutes before the seizure at which the first PREDICTIVE alarm
+    # fired (negative = no alarm during the preictal run-up).
     lead_time_minutes: jax.Array
+    # First truly-preictal chunk (label-derived); alarms before it are
+    # false positives, not predictions. -1 when the stream has no
+    # truly-preictal chunk (nothing to predict).
+    onset_chunk: jax.Array
+
+
+def lead_time_from_alarms(alarms: jax.Array, true_chunks: jax.Array) -> jax.Array:
+    """Minutes of warning the alarm sequence earned, paper semantics.
+
+    ``true_chunks[t] == 1`` marks the label-derived preictal run-up; the
+    seizure itself is the END of the stream (the Figs. 3-10 protocol
+    always stops at the ictal onset, so chunk ``n`` IS the onset --
+    trailing sub-chunk ictal windows are dropped by the chunking exactly
+    as ``chunk_predictions`` drops them). Lead time is measured from the
+    first alarm AT OR AFTER the preictal onset chunk: an alarm that only
+    fired earlier is a false positive (it predicts nothing -- the
+    pre-fix code credited it anyway, inflating lead time by up to the
+    whole interictal span), and a stream with no truly-preictal chunk
+    has no seizure to predict. Both score -1.
+
+    Chunk-START convention (the paper's): a lead of k*8 minutes means
+    the alarm chunk BEGAN k chunks before the seizure. The alarm
+    decision itself lands once that chunk is scored, so the operational
+    warning is up to one chunk (8 min) shorter than the reported lead.
+    """
+    alarms = jnp.asarray(alarms, jnp.int32)
+    true_chunks = jnp.asarray(true_chunks, jnp.int32)
+    n_chunks = alarms.shape[0]
+    has_onset = jnp.any(true_chunks == 1)
+    onset = jnp.argmax(true_chunks)  # first 1 (0 if none: gated below)
+    predictive = (alarms == 1) & (jnp.arange(n_chunks) >= onset)
+    first_alarm = jnp.argmax(predictive)  # first predictive alarm
+    lead = (n_chunks - first_alarm).astype(jnp.float32) * 8.0  # minutes
+    return jnp.where(has_onset & jnp.any(predictive), lead, -1.0)
 
 
 def evaluate_timeline(
@@ -184,17 +258,11 @@ def evaluate_timeline(
     preds = jnp.asarray(np.concatenate(window_preds).astype(np.int32))
 
     true_chunks = chunk_predictions(recording.labels, cfg)
-    # Seizure onset chunk = first truly-preictal chunk; the paper counts
-    # lead time from alarm to the *ictal* onset at the end of the stream.
-    n_chunks = chunks.shape[0]
-    onset_chunk = jnp.argmax(true_chunks)  # first 1
-    ict_end = n_chunks  # stream ends at the seizure
-    first_alarm = jnp.where(
-        jnp.any(alarms == 1), jnp.argmax(alarms), jnp.asarray(n_chunks)
+    onset_chunk = jnp.where(  # first truly-preictal chunk; -1 = none
+        jnp.any(true_chunks == 1), jnp.argmax(true_chunks), -1
     )
-    lead = (ict_end - first_alarm).astype(jnp.float32) * 8.0  # minutes
-    lead = jnp.where(jnp.any(alarms == 1), lead, -1.0)
+    lead = lead_time_from_alarms(alarms, true_chunks)
     return TimelineResult(
         window_preds=preds, chunk_preds=chunks, alarms=alarms,
-        lead_time_minutes=lead,
+        lead_time_minutes=lead, onset_chunk=onset_chunk,
     )

@@ -275,6 +275,59 @@ class TestMapReduce:
         out = job.run_local(2, x, replicated_inputs=(scale,))
         assert float(out) == pytest.approx(48.0)
 
+    def test_run_local_supports_collectives(self):
+        # run_local's vmap carries the axis name, so map fns may psum
+        # (the distributed forest trainer's global feature moments).
+        x = jnp.arange(8.0).reshape(8, 1)
+        job = mr.MapReduce(
+            lambda s: jax.lax.psum(jnp.sum(s), "data"), mr.reduce_max
+        )
+        assert float(job.run_local(4, x)) == pytest.approx(28.0)
+
+
+# ---------------------------------------------------------- shuffle_by_key ----
+
+class TestShuffleByKey:
+    """Exercised under vmap-with-axis-name (all_to_all has a batching
+    rule), the same emulation MapReduce.run_local uses."""
+
+    def _shuffle(self, values, keys, n_shards):
+        return jax.vmap(
+            lambda v, k: mr.shuffle_by_key(v, k, "data", n_shards),
+            axis_name="data",
+        )(values, keys)
+
+    def test_balanced_keys_route_exactly(self):
+        # 2 shards x 4 rows, two rows per destination from each shard.
+        values = jnp.arange(8.0).reshape(2, 4, 1)
+        keys = jnp.asarray([[0, 1, 0, 1], [1, 0, 1, 0]])
+        out = self._shuffle(values, keys, 2)
+        # shard 0 receives both shards' dest-0 rows (local order kept).
+        assert sorted(np.asarray(out[0, :, 0]).tolist()) == [0.0, 2.0, 5.0, 7.0]
+        assert sorted(np.asarray(out[1, :, 0]).tolist()) == [1.0, 3.0, 4.0, 6.0]
+
+    def test_overflow_drops_excess_and_pads_deficit(self):
+        # Shard 0 keys THREE of its four rows to destination 0 (bucket
+        # capacity 2): the third must be DROPPED -- not leak into shard
+        # 1's bucket (the pre-guard misrouting) -- and the short dest-1
+        # bucket is zero-padded.
+        values = jnp.asarray([[1.0, 2.0, 3.0, 4.0],
+                              [10.0, 20.0, 30.0, 40.0]])[..., None]
+        keys = jnp.asarray([[0, 0, 0, 1], [0, 1, 0, 1]])
+        out = self._shuffle(values, keys, 2)
+        # dest 0: shard0 keeps rows 1,2 (drops 3), shard1 sends 10,30.
+        assert np.asarray(out[0, :, 0]).tolist() == [1.0, 2.0, 10.0, 30.0]
+        # dest 1: shard0 sends row 4 (+pad), shard1 sends 20,40.
+        assert np.asarray(out[1, :, 0]).tolist() == [4.0, 0.0, 20.0, 40.0]
+        # the overflow row 3.0 appears NOWHERE.
+        assert 3.0 not in np.asarray(out).ravel().tolist()
+
+    def test_ragged_rows_per_shard_rejected(self):
+        with pytest.raises(ValueError, match="not divisible"):
+            mr.shuffle_by_key(
+                jnp.zeros((5, 1)), jnp.zeros((5,), jnp.int32), "data", 2
+            )
+
 
 # ------------------------------------------------------------- ensemble ----
 

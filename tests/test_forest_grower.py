@@ -1,0 +1,209 @@
+"""Fused multi-tree grower + histogram kernel.
+
+The contracts the training refactor rests on:
+
+  * ``decision_tree.fit_forest_binned`` is BIT-IDENTICAL to a per-tree
+    ``fit_binned`` sweep on the same inputs (same ops, same order, one
+    leading tree axis) -- and therefore ``rotation_forest.fit`` is
+    bit-identical to the per-tree ``fit_per_tree`` oracle on one key.
+  * The Pallas class-histogram kernel in interpret mode is bit-exact
+    against its blocked pure-JAX reference, which itself matches the
+    scatter-add formulation the default grower path uses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decision_tree as dt
+from repro.core import rotation_forest as rf
+from repro.kernels.histogram import kernel as hist_kernel
+from repro.kernels.histogram import ops as hist_ops
+from repro.kernels.histogram import ref as hist_ref
+
+
+def _forest_inputs(t=5, n=300, f=12, n_bins=16, seed=0):
+    kx, ky, kw = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (t, n, f))
+    y = (jax.random.normal(ky, (n,)) > 0).astype(jnp.int32)
+    w = (jax.random.uniform(kw, (t, n)) < 0.75).astype(jnp.float32)
+    edges = jax.vmap(lambda xt: dt.compute_bin_edges(xt, n_bins))(x)
+    xb = jax.vmap(dt.bin_features)(x, edges)
+    return xb, y, w, edges
+
+
+def _assert_trees_equal(forest: dt.TreeParams, per_tree: list[dt.TreeParams]):
+    for t, one in enumerate(per_tree):
+        np.testing.assert_array_equal(
+            np.asarray(forest.split_feature[t]), np.asarray(one.split_feature)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(forest.split_bin[t]), np.asarray(one.split_bin)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(forest.leaf_probs[t]), np.asarray(one.leaf_probs)
+        )
+
+
+class TestFusedGrower:
+    @pytest.mark.parametrize("depth", [1, 3, 5])
+    def test_bit_identical_to_per_tree_oracle(self, depth):
+        xb, y, w, edges = _forest_inputs()
+        forest = dt.fit_forest_binned(
+            xb, y, w, depth=depth, n_classes=2, n_bins=16, bin_edges=edges
+        )
+        per_tree = [
+            dt.fit_binned(
+                xb[t], y, w[t], depth=depth, n_classes=2, n_bins=16,
+                bin_edges=edges[t],
+            )
+            for t in range(xb.shape[0])
+        ]
+        _assert_trees_equal(forest, per_tree)
+
+    def test_pure_tree_stops_splitting(self):
+        # All-one-class trees must be splitless in the fused grower too.
+        xb = jnp.zeros((3, 32, 4), jnp.int32)
+        y = jnp.zeros((32,), jnp.int32)
+        w = jnp.ones((3, 32), jnp.float32)
+        forest = dt.fit_forest_binned(xb, y, w, depth=3, n_classes=2, n_bins=8)
+        assert int(jnp.max(forest.split_feature)) == -1
+        assert float(forest.leaf_probs[:, 0, 0].min()) > 0.9
+
+    def test_zero_weight_tree_rides_along(self):
+        # A fully masked-out tree (empty bootstrap) must not poison the
+        # batch: it grows no splits and predicts the (smoothed) prior,
+        # while its siblings fit normally.
+        xb, y, w, edges = _forest_inputs(t=3)
+        w = w.at[1].set(0.0)
+        forest = dt.fit_forest_binned(
+            xb, y, w, depth=3, n_classes=2, n_bins=16, bin_edges=edges
+        )
+        assert int(jnp.max(forest.split_feature[1])) == -1
+        one = dt.fit_binned(
+            xb[0], y, w[0], depth=3, n_classes=2, n_bins=16, bin_edges=edges[0]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(forest.split_feature[0]), np.asarray(one.split_feature)
+        )
+
+    @pytest.mark.parametrize("use_kernel", [False, True])
+    def test_rotation_forest_fit_matches_per_tree_fit(self, use_kernel):
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (200, 12))
+        y = (x[:, :4].sum(-1) > 0).astype(jnp.int32)
+        cfg = rf.RotationForestConfig(
+            n_trees=6, n_subsets=3, depth=4, n_classes=2, n_bins=16,
+            use_hist_kernel=use_kernel,
+        )
+        fused = rf.fit(jax.random.PRNGKey(1), x, y, cfg)
+        oracle = rf.fit_per_tree(
+            jax.random.PRNGKey(1), x, y, cfg._replace(use_hist_kernel=False)
+        )
+        # The kernel path may flip f32 low-order histogram bits, but on
+        # this fixture every split decision survives; the default path
+        # must be exactly equal leaf-for-leaf.
+        np.testing.assert_array_equal(
+            np.asarray(fused.trees.split_feature),
+            np.asarray(oracle.trees.split_feature),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(fused.trees.split_bin),
+            np.asarray(oracle.trees.split_bin),
+        )
+        np.testing.assert_allclose(
+            np.asarray(fused.trees.leaf_probs),
+            np.asarray(oracle.trees.leaf_probs),
+            atol=0 if not use_kernel else 1e-5,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(fused.rotation), np.asarray(oracle.rotation)
+        )
+
+    def test_fused_forest_predicts(self):
+        key = jax.random.PRNGKey(4)
+        x = jax.random.normal(key, (300, 9))
+        y = (x[:, 0] - x[:, 1] > 0).astype(jnp.int32)
+        cfg = rf.RotationForestConfig(
+            n_trees=8, n_subsets=3, depth=4, n_classes=2, n_bins=16
+        )
+        params = rf.fit(jax.random.PRNGKey(0), x, y, cfg)
+        assert float(rf.accuracy(params, x, y)) > 0.9
+
+
+class TestHistogramKernel:
+    def _hist_inputs(self, t=4, n=300, f=6, n_buckets=24, c=2, seed=0):
+        kc, ky, kw = jax.random.split(jax.random.PRNGKey(seed), 3)
+        codes = jax.random.randint(kc, (t, n, f), 0, n_buckets)
+        y = jax.random.randint(ky, (n,), 0, c)
+        w = jax.random.uniform(kw, (t, n))
+        wy = w[..., None] * jax.nn.one_hot(y, c, dtype=jnp.float32)
+        return codes, wy
+
+    @pytest.mark.parametrize(
+        "n,f,n_buckets,block_n",
+        [
+            (300, 6, 24, 256),
+            (256, 6, 24, 128),
+            (37, 6, 24, 64),
+            # regression: at this shape a vmapped-ref formulation drifted
+            # from the kernel's plain per-step dot by one f32 ulp
+            (256, 12, 64, 256),
+        ],
+    )
+    def test_interpret_bit_exact_vs_ref(self, n, f, n_buckets, block_n):
+        codes, wy = self._hist_inputs(n=n, f=f, n_buckets=n_buckets)
+        h_ref = hist_ref.class_histogram(codes, wy, n_buckets, block_n=block_n)
+        h_ker = hist_kernel.class_histogram(
+            codes, wy, n_buckets=n_buckets, block_n=block_n, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(h_ker), np.asarray(h_ref))
+
+    def test_matmul_matches_scatter_formulation(self):
+        codes, wy = self._hist_inputs()
+        h_mm = hist_ref.class_histogram(codes, wy, 24)
+        h_sc = hist_ref.class_histogram_scatter(codes, wy, 24)
+        np.testing.assert_allclose(
+            np.asarray(h_mm), np.asarray(h_sc), atol=1e-4, rtol=1e-5
+        )
+
+    def test_out_of_range_codes_ignored(self):
+        codes, wy = self._hist_inputs()
+        poked = codes.at[:, 0, :].set(-1).at[:, 1, :].set(999)
+        h = hist_ref.class_histogram(poked, wy, 24)
+        zeroed = wy.at[:, :2].set(0.0)
+        want = hist_ref.class_histogram(codes, zeroed, 24)
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(want))
+        h_k = hist_kernel.class_histogram(
+            poked, wy, n_buckets=24, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(h_k), np.asarray(want))
+
+    def test_total_mass_conserved(self):
+        codes, wy = self._hist_inputs()
+        h = hist_ops.class_histogram(codes, wy, n_buckets=24, use_pallas=False)
+        # every (tree, feature) slice sums to the tree's total class mass
+        per_tf = np.asarray(h.sum(axis=(2, 3)))  # (T, F)
+        want = np.asarray(wy.sum(axis=(1, 2)))   # (T,)
+        np.testing.assert_allclose(
+            per_tf, np.broadcast_to(want[:, None], per_tf.shape), rtol=1e-5
+        )
+
+    def test_level_histogram_matches_grower_scatter(self):
+        # level_histogram (the grower's kernel entry) == the raw scatter
+        # the default path issues, up to float tolerance.
+        xb, y, w, _ = _forest_inputs(t=3, n=200, f=5, n_bins=8)
+        local = jnp.zeros((3, 200), jnp.int32)  # root level
+        h = hist_ops.level_histogram(
+            xb, local, y, w, nodes_at=1, n_bins=8, n_classes=2,
+            use_pallas=True,
+        )
+        codes = local[:, :, None] * 8 + xb
+        wy = w[..., None] * jax.nn.one_hot(y, 2, dtype=jnp.float32)
+        want = hist_ref.class_histogram_scatter(codes, wy, 8)
+        np.testing.assert_allclose(
+            np.asarray(h), np.asarray(want), atol=1e-4
+        )

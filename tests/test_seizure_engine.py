@@ -340,6 +340,60 @@ class TestInterleavingOracle:
 
 
 # ---------------------------------------------------------------------------
+# Pallas forest path + alarm reset (migrated from the deleted
+# SeizureScoringService shim tests -- the engine now owns both behaviors)
+# ---------------------------------------------------------------------------
+
+class TestKernelPathAndReset:
+    def _drive(self, engine, chunks):
+        session = engine.open_session(1)
+        out = []
+        for chunk in chunks:
+            session.push(chunk)
+            out += [
+                (e.chunk_pred, e.alarm)
+                for e in scored_events(engine.poll())
+            ]
+        return out
+
+    def test_pallas_forest_path_same_alarms(self, program, chunk_pool):
+        quiet, pre = chunk_pool
+        stream = [pre] * 4 + [quiet] * 2
+        ref = self._drive(
+            api.SeizureEngine(program, max_batch=2), stream
+        )
+        kernel = self._drive(
+            api.SeizureEngine(program, max_batch=2, use_forest_kernel=True),
+            stream,
+        )
+        assert ref == kernel
+
+    def test_reset_alarm_clears_ring(self, program, chunk_pool):
+        _, pre = chunk_pool
+        cfg = program.cfg
+        engine = api.SeizureEngine(program, max_batch=1)
+        s = engine.open_session(5)
+        for _ in range(cfg.alarm_m):
+            s.push(pre)
+        engine.poll()
+        assert engine.alarm_state(5) == 1
+        engine.reset_alarm(5)
+        assert engine.alarm_state(5) == 0
+
+    def test_reset_alarm_keeps_queued_chunks(self, program, chunk_pool):
+        # Reset clears the alarm ring only; a chunk pushed before the
+        # reset still gets scored (against the fresh ring).
+        _, pre = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=1)
+        s = engine.open_session(5)
+        s.push(pre)
+        engine.reset_alarm(5)
+        results = scored_events(engine.poll())
+        assert [e.patient_id for e in results] == [5]
+        assert results[0].alarm == 0  # one vote cannot fire k-of-m
+
+
+# ---------------------------------------------------------------------------
 # Session lifecycle
 # ---------------------------------------------------------------------------
 

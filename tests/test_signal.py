@@ -244,6 +244,15 @@ class TestPipeline:
         assert float(res.lead_time_minutes) > 0  # alarm fired before onset
         # no alarm during the first interictal hour (7 full chunks)
         assert int(res.alarms[:6].sum()) == 0
+        # onset chunk = start of the labeled preictal run-up (hour 1 of
+        # interictal = 7.5 chunks -> first majority-preictal chunk is 8)
+        assert int(res.onset_chunk) == 8
+        # the reported lead equals the helper applied to the outputs
+        want = pipeline.lead_time_from_alarms(
+            res.alarms, pipeline.chunk_predictions(test.labels, small_cfg)
+        )
+        assert float(res.lead_time_minutes) == float(want)
+
 
     def test_process_windows_shorter_than_one_chunk(self, small_cfg):
         # Regression: recordings with w < WINDOWS_PER_MATRIX (pad > w)
@@ -280,3 +289,47 @@ class TestPipeline:
         np.testing.assert_allclose(
             np.asarray(dist), np.asarray(serial), rtol=1e-5, atol=1e-5
         )
+
+
+class TestLeadTimeSemantics:
+    """Pins the lead-time convention: the stream ends AT the seizure
+    (end-of-stream = ictal onset, the paper's Figs. 3-10 protocol), and
+    only alarms at/after the preictal onset chunk are predictions --
+    earlier alarms are false positives and earn no credit. Regression
+    for the dead-``onset_chunk`` bug, where lead time was measured from
+    the first alarm EVER, crediting false alarms with up to the whole
+    interictal span."""
+
+    def test_alarm_at_onset_measured_to_stream_end(self):
+        true = jnp.asarray([0] * 5 + [1] * 5, jnp.int32)
+        alarms = jnp.asarray([0] * 5 + [1] * 5, jnp.int32)
+        # onset chunk 5 of 10: 5 chunks x 8 min of warning
+        assert float(pipeline.lead_time_from_alarms(alarms, true)) == 40.0
+
+    def test_late_alarm_shrinks_lead(self):
+        true = jnp.asarray([0] * 5 + [1] * 5, jnp.int32)
+        alarms = jnp.asarray([0] * 8 + [1, 1], jnp.int32)
+        assert float(pipeline.lead_time_from_alarms(alarms, true)) == 16.0
+
+    def test_false_alarm_before_onset_not_credited(self):
+        true = jnp.asarray([0] * 5 + [1] * 5, jnp.int32)
+        alarms = jnp.asarray([1, 1, 0, 0, 0, 0, 0, 0, 0, 0], jnp.int32)
+        # pre-fix semantics credited this with (10 - 0) * 8 = 80 minutes
+        assert float(pipeline.lead_time_from_alarms(alarms, true)) == -1.0
+
+    def test_persistent_alarm_counts_from_onset(self):
+        true = jnp.asarray([0] * 5 + [1] * 5, jnp.int32)
+        alarms = jnp.ones((10,), jnp.int32)  # alarming since chunk 0
+        # credit starts at the onset chunk, not at the false-alarm start
+        assert float(pipeline.lead_time_from_alarms(alarms, true)) == 40.0
+
+    def test_no_alarms_is_negative(self):
+        true = jnp.asarray([0] * 5 + [1] * 5, jnp.int32)
+        alarms = jnp.zeros((10,), jnp.int32)
+        assert float(pipeline.lead_time_from_alarms(alarms, true)) == -1.0
+
+    def test_no_onset_is_negative(self):
+        # all-interictal stream: nothing to predict, whatever alarmed
+        true = jnp.zeros((10,), jnp.int32)
+        alarms = jnp.ones((10,), jnp.int32)
+        assert float(pipeline.lead_time_from_alarms(alarms, true)) == -1.0
