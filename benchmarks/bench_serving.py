@@ -19,6 +19,16 @@ Three workloads:
     round to the fixed batch; the engine carries the leftover in its
     queue and refills freed slots mid-flight, so its batches stay dense.
     Both run the SAME fused device step -- the delta is pure scheduling.
+  * ``replay``  -- single-patient catch-up: one session with a deep
+    chunk backlog, scored chunk-per-step (the PR-3 schedule,
+    ``replay_depth=1``) vs the on-device backlog scan
+    (``replay_depth=D``: the alarm ring's sequential dependency advances
+    inside ONE jitted step). Minimal per-chunk compute (single-window
+    chunks, no denoise) isolates the per-step dispatch + readback-sync
+    cost the scan amortizes -- the same role the staggered trace plays
+    for batching density. Identical math either way (events are
+    byte-identical; tests/test_frontend.py), so the delta is pure
+    sequential-dispatch overhead.
 
   PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json F]
 """
@@ -27,6 +37,7 @@ from __future__ import annotations
 
 import argparse
 import collections
+import dataclasses
 import functools
 import time
 
@@ -219,10 +230,52 @@ def run_seizure_staggered(rows: Rows, smoke: bool = False) -> None:
              "flush-batched time / continuous-engine time (>=1 = engine wins)")
 
 
+def run_seizure_replay(rows: Rows, smoke: bool = False) -> None:
+    """Backlog catch-up: one-chunk-per-step vs the in-step replay scan."""
+    _, cfg, program = _fitted_program(smoke)
+    # Single-window chunks with denoise off: per-chunk device compute is
+    # minimal, so the timed delta is the per-step dispatch/sync cost that
+    # the sequential alarm-ring dependency forces on a depth-1 engine.
+    light = dataclasses.replace(program, cfg=cfg._replace(denoise=False))
+    chunk_windows = 1
+    backlog = 24 if smoke else 48
+    depth = 12 if smoke else 16
+    reps = 3  # scheduling benches are noisy; median of 3 even in smoke
+    stream = np.asarray(eeg_data.generate_windows(
+        jax.random.PRNGKey(4), jnp.asarray(3), eeg_data.INTERICTAL,
+        backlog * chunk_windows,
+    ))
+    n_rows = backlog * chunk_windows  # scored window-rows
+
+    def catchup(replay_depth):
+        def bench():
+            engine = SeizureEngine(
+                light, max_batch=1, chunk_windows=chunk_windows,
+                replay_depth=replay_depth,
+            )
+            engine.open_session(0).push(stream)
+            engine.poll()
+            return engine.steps
+        return bench
+
+    steps_one = catchup(1)()       # compile + step-count probe
+    steps_scan = catchup(depth)()
+    t_one = time_fn(catchup(1), iters=reps) / 1e6
+    t_scan = time_fn(catchup(depth), iters=reps) / 1e6
+    rows.add("serving/replay_rows_per_s", n_rows / t_scan,
+             f"{backlog} chunks in {steps_scan} scanned steps (depth {depth})")
+    rows.add("serving/seizure/replay_chunk_per_step_rows_per_s",
+             n_rows / t_one,
+             f"{backlog} chunks in {steps_one} steps (PR-3 schedule)")
+    rows.add("serving/seizure/replay_speedup", t_one / t_scan,
+             "chunk-per-step time / scanned-replay time (>=1 = scan wins)")
+
+
 def run(rows: Rows, arch: str = "qwen3-0.6b", smoke: bool = False) -> None:
     run_lm(rows, arch=arch, smoke=smoke)
     run_seizure(rows, smoke=smoke)
     run_seizure_staggered(rows, smoke=smoke)
+    run_seizure_replay(rows, smoke=smoke)
 
 
 if __name__ == "__main__":

@@ -25,14 +25,18 @@ import sys
 
 # Gate the fused serving row (absolute windows/s -- refresh the baseline
 # when runner hardware changes) plus its hardware-independent fused/
-# unfused ratio, and the training-side twin: the fused-grower training
-# throughput. The speedup-vs-loop/vmap and shard-scaling training rows
-# are recorded for the trajectory but hover near 1.0 on CPU (XLA batches
-# the vmapped scatters) and swing too much run-to-run to gate at 30%.
+# unfused ratio, the training-side twin (the fused-grower training
+# throughput), and the backlog-replay row (the scanned engine step's
+# single-patient catch-up rate; its speedup-vs-depth-1 companion is
+# recorded but, like the other scheduling ratios, swings too much
+# run-to-run to gate at 30%). The speedup-vs-loop/vmap and shard-scaling
+# training rows are recorded for the trajectory but hover near 1.0 on
+# CPU (XLA batches the vmapped scatters).
 DEFAULT_ROWS = [
     "serving/seizure/fused_windows_per_s",
     "serving/seizure/fused_speedup",
     "training/forest/fused_rows_per_s",
+    "serving/replay_rows_per_s",
 ]
 
 

@@ -36,6 +36,13 @@ def main() -> None:
                          "through the checkpoint store")
     ap.add_argument("--use-forest-kernel", action="store_true",
                     help="Pallas forest traversal (interpret mode off-TPU)")
+    ap.add_argument("--replay-depth", type=int, default=4,
+                    help="backlogged chunks one engine step replays per "
+                         "slot (catch-up bursts score up to this many "
+                         "chunks per jitted dispatch)")
+    ap.add_argument("--latency-budget", type=float, default=None,
+                    help="seconds before a partial batch is flushed "
+                         "anyway under poll(drain=False)")
     args = ap.parse_args()
 
     cfg = pipeline.PipelineConfig(
@@ -56,6 +63,8 @@ def main() -> None:
 
     engine = SeizureEngine(
         program, max_batch=args.batch,
+        replay_depth=args.replay_depth,
+        latency_budget_s=args.latency_budget,
         use_forest_kernel=args.use_forest_kernel,
     )
 
@@ -73,12 +82,10 @@ def main() -> None:
           f"(batch {args.batch}, pushes of {args.push_windows} windows)")
     t0 = time.time()
     scored = 0
-    offset = 0
-    while any(offset < s.shape[0] for s in streams.values()):
-        for pid, wins in streams.items():
-            engine.session(pid).push(wins[offset:offset + args.push_windows])
-        offset += args.push_windows
-        for event in engine.poll():
+
+    def handle(events) -> None:
+        nonlocal scored
+        for event in events:
             if isinstance(event, AlarmRaised):
                 print(f"  *** ALARM *** patient {event.patient_id} "
                       f"at chunk {event.chunk_index} "
@@ -90,10 +97,22 @@ def main() -> None:
                           f"patient {event.patient_id}: "
                           f"preictal_frac={event.preictal_frac:.2f} "
                           f"vote={event.chunk_pred} alarm={event.alarm}")
+
+    # With a latency budget, defer partial batches (the budget bounds how
+    # long a lone chunk can wait); without one, drain every poll.
+    drain_each = args.latency_budget is None
+    offset = 0
+    while any(offset < s.shape[0] for s in streams.values()):
+        for pid, wins in streams.items():
+            engine.session(pid).push(wins[offset:offset + args.push_windows])
+        offset += args.push_windows
+        handle(engine.poll(drain=drain_each))
+    handle(engine.poll())  # final drain of any deferred partial batch
     dt = time.time() - t0
     windows = scored * eeg_data.WINDOWS_PER_MATRIX
     print(f"scored {scored} chunks ({windows} windows) in {dt:.1f}s "
-          f"-> {windows / dt:.0f} windows/s")
+          f"-> {windows / dt:.0f} windows/s "
+          f"({engine.steps} engine steps, replay depth {args.replay_depth})")
     for pid in streams:
         print(f"patient {pid}: final alarm state = {engine.alarm_state(pid)}")
 

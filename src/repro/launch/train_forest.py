@@ -44,6 +44,13 @@ def main() -> None:
                     help="held-out interictal hours before the run-up")
     ap.add_argument("--batch", type=int, default=4,
                     help="SeizureEngine slots for the serve phase")
+    ap.add_argument("--replay-depth", type=int, default=4,
+                    help="backlogged chunks one engine step replays per "
+                         "slot (the in-step lax.scan depth; 1 = PR-3 "
+                         "chunk-per-step schedule)")
+    ap.add_argument("--latency-budget", type=float, default=None,
+                    help="seconds before poll(drain=False) flushes a "
+                         "partial batch (default: drain fully each poll)")
     ap.add_argument("--save-dir", default=None,
                     help="ScoringProgram checkpoint dir (default: tmp)")
     ap.add_argument("--use-hist-kernel", action="store_true",
@@ -110,12 +117,16 @@ def main() -> None:
         hours_interictal=args.hours_interictal,
     )
     wins = np.asarray(timeline.windows)
-    engine = SeizureEngine(program, max_batch=args.batch)
+    engine = SeizureEngine(
+        program, max_batch=args.batch, replay_depth=args.replay_depth,
+        latency_budget_s=args.latency_budget,
+    )
     session = engine.open_session(args.patient)
     events, t0 = [], time.time()
+    drain_each = args.latency_budget is None
     for i in range(0, wins.shape[0], 37):  # deliberately chunk-unaligned
         session.push(wins[i : i + 37])
-        events += engine.poll()
+        events += engine.poll(drain=drain_each)
     events += engine.poll()
     dt = time.time() - t0
     scored = [e for e in events if isinstance(e, ChunkScored)]
@@ -124,7 +135,8 @@ def main() -> None:
         print(f"[serve] chunk {e.chunk_index:3d}: pred={e.chunk_pred} "
               f"frac={e.preictal_frac:.2f}{flag}")
     print(f"[serve] {wins.shape[0]} windows in {dt:.1f}s "
-          f"({wins.shape[0] / dt:.1f} windows/s), "
+          f"({wins.shape[0] / dt:.1f} windows/s, {engine.steps} engine "
+          f"steps at replay depth {args.replay_depth}), "
           f"final alarm={engine.alarm_state(args.patient)}")
 
     # ---- the loaded program must reproduce the offline oracle -----------

@@ -20,12 +20,18 @@ EEG streams at once, with the k-of-m alarm rule evaluated on-device.
     internally); results come back from ``engine.poll()`` as typed
     events: ``ChunkScored``, ``AlarmRaised``, ``AlarmCleared``.
 
-Division of labor: the device step scores a (B, W, C, N) chunk batch --
-MSPCA denoise -> WPD features -> packed forest vote -> chunk vote -- and
-advances the per-slot alarm rings (k-of-m on-device, shardable along
-``data`` with the rest of the batch). The host schedules sessions into
-slots, splices evicted/admitted rings, and turns the tiny (B,) readbacks
-into events.
+Division of labor: the device step scores a (B, D, W, C, N) batch of up
+to ``replay_depth`` backlogged chunks per slot in ONE jitted program --
+an on-device ``lax.scan`` over the backlog axis whose body runs the
+streaming front-end transition (``signal.frontend.frontend_step``:
+MSPCA denoise -> WPD features), the packed forest vote, the chunk vote,
+AND the k-of-m alarm-ring advance. The sequential dependency (ring +
+frontend state) lives inside the scan, so a single-patient catch-up
+scores its whole backlog per dispatch instead of one chunk per engine
+step. The host schedules sessions into slots, splices evicted/admitted
+rings + frontend context, enforces the optional latency budget
+(deadline-based partial flush), and turns the (B, D) readbacks into
+per-chunk events.
 """
 
 from __future__ import annotations
@@ -35,6 +41,7 @@ import dataclasses
 import functools
 import json
 import os
+import time
 from typing import NamedTuple
 
 import jax
@@ -45,7 +52,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.checkpoint import store as ckpt_store
 from repro.core import rotation_forest as rf
 from repro.kernels.forest import ops as forest_ops
-from repro.signal import eeg_data, features, pipeline
+from repro.signal import eeg_data, features, frontend, pipeline
 
 
 # ---------------------------------------------------------------------------
@@ -169,67 +176,132 @@ class ScoringProgram:
 class EngineState(NamedTuple):
     """Per-slot device state (leading axis = slot, sharded along ``data``).
 
-    The alarm ring lives HERE, inside the jitted step: ``rings[b]`` holds
-    slot b's last ``alarm_m`` chunk votes (zero-initialized, so a ring
-    with fewer than m votes written behaves exactly like the reference
-    deque), ``ring_pos[b]`` the next cyclic write index, ``alarm[b]`` the
-    k-of-m state after the slot's latest chunk.
+    The sequential stream context lives HERE, inside the jitted step:
+    ``rings[b]`` holds slot b's last ``alarm_m`` chunk votes
+    (zero-initialized, so a ring with fewer than m votes written behaves
+    exactly like the reference deque), ``ring_pos[b]`` the next cyclic
+    write index, ``alarm[b]`` the k-of-m state after the slot's latest
+    chunk, and ``fe_boundary[b]`` / ``fe_phase[b]`` the slot's streaming
+    front-end context (``signal.frontend.FrontendState``) -- carried
+    across engine steps AND across the in-step backlog-replay scan.
     """
 
-    rings: jax.Array     # (B, m) int32
-    ring_pos: jax.Array  # (B,) int32
-    alarm: jax.Array     # (B,) int32
+    rings: jax.Array        # (B, m) int32
+    ring_pos: jax.Array     # (B,) int32
+    alarm: jax.Array        # (B,) int32
+    fe_boundary: jax.Array  # (B, C, N) float32
+    fe_phase: jax.Array     # (B,) int32
+
+    def frontend_state(self) -> frontend.FrontendState:
+        """The (B,)-leading slot frontend contexts as a FrontendState."""
+        return frontend.FrontendState(
+            boundary=self.fe_boundary, phase=self.fe_phase
+        )
 
 
-def init_state(max_batch: int, alarm_m: int) -> EngineState:
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_batch", "alarm_m", "n_channels", "window"),
+)
+def init_state(
+    max_batch: int,
+    alarm_m: int,
+    n_channels: int = eeg_data.N_CHANNELS,
+    window: int = eeg_data.WINDOW,
+) -> EngineState:
+    # jitted (all-static) so the zero-fill happens ON device: engine
+    # construction stays legal under jax.transfer_guard("disallow").
+    fe = frontend.init_batch(max_batch, n_channels, window)
     return EngineState(
         rings=jnp.zeros((max_batch, alarm_m), jnp.int32),
         ring_pos=jnp.zeros((max_batch,), jnp.int32),
         alarm=jnp.zeros((max_batch,), jnp.int32),
+        fe_boundary=fe.boundary,
+        fe_phase=fe.phase,
     )
 
 
-def _score_chunks(chunks, packed, feat_mean, feat_std, *, cfg, use_pallas):
-    """(B, W, C, N) raw chunk windows -> per-chunk vote/fraction/preds.
-
-    The fused map phase: denoise each chunk matrix, extract WPD features,
-    z-score with the training statistics, run the packed forest, majority
-    -vote each chunk. One XLA program; ``chunks`` is donated by callers.
-    """
-    b, w, _, _ = chunks.shape
-    feats = jax.vmap(lambda m: pipeline.process_windows(m, cfg))(chunks)
-    flat = feats.reshape(b * w, feats.shape[-1])
-    normed, _, _ = features.normalize(flat, feat_mean, feat_std)
+def _vote_chunks(feats, packed, feat_mean, feat_std, *, use_pallas):
+    """(B, W, F) feature rows -> per-chunk vote/fraction/preds: z-score
+    with the training statistics, run the packed forest, majority-vote
+    each chunk (paper: "half of total value"). The single voting
+    implementation both the stateless score path and the engine's
+    replay-scan body share."""
+    b, w, f = feats.shape
+    normed, _, _ = features.normalize(feats.reshape(b * w, f),
+                                      feat_mean, feat_std)
     probs = forest_ops.forest_predict_proba(
         packed, normed, use_pallas=use_pallas
     )
     preds = jnp.argmax(probs, axis=-1).reshape(b, w).astype(jnp.int32)
     frac = jnp.mean(preds.astype(jnp.float32), axis=1)
-    votes = (frac > 0.5).astype(jnp.int32)  # paper: "half of total value"
+    votes = (frac > 0.5).astype(jnp.int32)
     return votes, frac, preds
+
+
+def _score_chunks(chunks, packed, feat_mean, feat_std, *, cfg, use_pallas):
+    """(B, W, C, N) raw chunk windows -> per-chunk vote/fraction/preds.
+
+    The fused map phase: denoise each chunk matrix (the shared
+    ``frontend.chunk_features`` entry point), then the shared
+    ``_vote_chunks`` voting block. One XLA program; ``chunks`` is
+    donated by callers.
+    """
+    feats = jax.vmap(lambda m: frontend.chunk_features(m, cfg))(chunks)
+    return _vote_chunks(
+        feats, packed, feat_mean, feat_std, use_pallas=use_pallas
+    )
 
 
 def _engine_step(state, chunks, active, packed, feat_mean, feat_std,
                  *, cfg, use_pallas):
-    """Score one slot batch AND advance the on-device alarm rings.
+    """Scan each slot over its chunk backlog AND advance the on-device
+    sequential state (alarm rings + frontend context) -- one jitted step.
 
-    ``active`` is a (B,) 0/1 mask: inactive slots (padding rows) keep
-    their ring/pos/alarm untouched. Everything is per-slot independent,
-    so the whole state advances shardable along the batch axis.
+    ``chunks`` is (B, D, W, C, N): up to D backlogged chunks per slot,
+    valid-prefix order. ``active`` is a (B, D) 0/1 mask: masked entries
+    (padding rows / slots with a shallower backlog) keep their
+    ring/pos/alarm/frontend untouched. The backlog axis is a
+    ``lax.scan`` (the alarm ring is a genuine sequential dependency);
+    everything is per-slot independent across the batch axis, so the
+    state advances shardable along ``data``. Returns per-chunk
+    (B, D)-shaped votes/fracs/alarms and (B, D, W) window preds.
     """
-    votes, frac, preds = _score_chunks(
-        chunks, packed, feat_mean, feat_std, cfg=cfg, use_pallas=use_pallas
-    )
-    votes = votes * active
     b, m = state.rings.shape
-    written = state.rings.at[jnp.arange(b), state.ring_pos].set(votes)
-    rings = jnp.where(active[:, None] > 0, written, state.rings)
-    ring_pos = jnp.where(active > 0, (state.ring_pos + 1) % m, state.ring_pos)
-    hits = jnp.sum(rings, axis=1)
-    alarm = jnp.where(
-        active > 0, (hits >= cfg.alarm_k).astype(jnp.int32), state.alarm
+
+    def body(st, inp):
+        ch, act = inp  # (B, W, C, N), (B,)
+        fe, feats = jax.vmap(
+            lambda s, c_: frontend.frontend_step(s, c_, cfg)
+        )(st.frontend_state(), ch)
+        votes, frac, preds = _vote_chunks(
+            feats, packed, feat_mean, feat_std, use_pallas=use_pallas
+        )
+        votes = votes * act
+        written = st.rings.at[jnp.arange(b), st.ring_pos].set(votes)
+        rings = jnp.where(act[:, None] > 0, written, st.rings)
+        ring_pos = jnp.where(act > 0, (st.ring_pos + 1) % m, st.ring_pos)
+        hits = jnp.sum(rings, axis=1)
+        alarm = jnp.where(
+            act > 0, (hits >= cfg.alarm_k).astype(jnp.int32), st.alarm
+        )
+        new = EngineState(
+            rings=rings, ring_pos=ring_pos, alarm=alarm,
+            fe_boundary=jnp.where(
+                act[:, None, None] > 0, fe.boundary, st.fe_boundary
+            ),
+            fe_phase=jnp.where(act > 0, fe.phase, st.fe_phase),
+        )
+        return new, (votes, frac, alarm, preds)
+
+    state, (votes, frac, alarm, preds) = jax.lax.scan(
+        body, state,
+        (jnp.swapaxes(chunks, 0, 1), jnp.swapaxes(active, 0, 1)),
     )
-    return EngineState(rings, ring_pos, alarm), votes, frac, alarm, preds
+    # Scan stacks outputs (D, B, ...); hand the host (B, D, ...) views.
+    return (
+        state, votes.T, frac.T, alarm.T, jnp.swapaxes(preds, 0, 1)
+    )
 
 
 # One shared jit cache across engine instances (cfg/use_pallas static).
@@ -243,18 +315,28 @@ _jit_score_chunks = functools.partial(
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _splice_state(state: EngineState, slot, ring, pos, alarm) -> EngineState:
-    """Write one session's saved (ring, pos, alarm) into slot ``slot``.
+def _splice_state(
+    state: EngineState, slot, ring, pos, alarm, boundary, phase
+) -> EngineState:
+    """Write one session's saved (ring, pos, alarm, frontend context)
+    into slot ``slot``.
 
     ``slot`` is a traced scalar (dynamic_update_slice), so one compiled
     program covers every slot index."""
     rings = jax.lax.dynamic_update_slice(
         state.rings, ring[None].astype(state.rings.dtype), (slot, 0)
     )
+    fe_boundary = jax.lax.dynamic_update_slice(
+        state.fe_boundary,
+        boundary[None].astype(state.fe_boundary.dtype),
+        (slot, 0, 0),
+    )
     return EngineState(
         rings=rings,
         ring_pos=state.ring_pos.at[slot].set(pos),
         alarm=state.alarm.at[slot].set(alarm),
+        fe_boundary=fe_boundary,
+        fe_phase=state.fe_phase.at[slot].set(phase),
     )
 
 
@@ -275,15 +357,24 @@ class StreamSession:
     def __init__(self, engine: "SeizureEngine", patient_id: int):
         self._engine = engine
         self.patient_id = patient_id
-        self.chunks: collections.deque[np.ndarray] = collections.deque()
+        # Completed chunks awaiting scoring: (enqueue_time, windows)
+        # pairs -- the timestamp drives the engine's latency budget.
+        self.chunks: collections.deque[tuple[float, np.ndarray]] = (
+            collections.deque()
+        )
         self._buf = np.zeros(
             (0, eeg_data.N_CHANNELS, eeg_data.WINDOW), np.float32
         )
-        # Host copy of the alarm ring; authoritative only while the
-        # session is NOT resident in a slot (the device copy rules then).
+        # Host copies of the alarm ring and streaming-frontend context;
+        # authoritative only while the session is NOT resident in a slot
+        # (the device copy rules then).
         self.ring = np.zeros((engine.alarm_m,), np.int32)
         self.ring_pos = 0
         self.alarm = 0
+        self.fe_boundary = np.zeros(
+            (eeg_data.N_CHANNELS, eeg_data.WINDOW), np.float32
+        )
+        self.fe_phase = 0
         self.chunk_seq = 0
         self.slot: int | None = None
         self.queued = False
@@ -312,8 +403,9 @@ class StreamSession:
             else windows.copy()
         )
         per = self._engine.chunk_windows
+        now = self._engine._clock()
         while self._buf.shape[0] >= per:
-            self.chunks.append(self._buf[:per])
+            self.chunks.append((now, self._buf[:per]))
             self._buf = self._buf[per:]
         if self.chunks:
             self._engine._mark_ready(self)
@@ -341,17 +433,34 @@ class SeizureEngine:
     """Continuous-batching multi-patient seizure-scoring engine.
 
     program       : the frozen ``ScoringProgram`` to serve.
-    max_batch     : number of device slots (one compiled program, ever).
+    max_batch     : number of device slots (one compiled program per
+                    backlog depth, ever).
     chunk_windows : windows per chunk (the paper's 60).
+    replay_depth  : max backlogged chunks ONE engine step scores per slot
+                    (the in-step ``lax.scan`` depth). 1 reproduces the
+                    chunk-per-step schedule exactly; deeper replay gives
+                    a backlogged session (e.g. single-patient catch-up
+                    after an uplink outage) up to ``replay_depth`` chunks
+                    per dispatch with byte-identical events. Steps are
+                    bucketed to the deepest ready backlog, so shallow
+                    traffic never pays for unused depth.
+    latency_budget_s : deadline for ``poll(drain=False)``: a partial
+                    batch is flushed anyway once the OLDEST queued chunk
+                    has waited longer than this many seconds (None keeps
+                    the pure dense-batching trade-off).
     mesh          : optional mesh; slots are sharded along ``data``.
     use_forest_kernel : route the forest stage through the Pallas kernel
                     (interpret mode off-TPU); default pure-JAX traversal.
+    clock         : monotonic time source for the latency budget
+                    (injectable for tests; default ``time.monotonic``).
 
     Scheduling: each slot is bound to at most one session; a session
-    scores its chunks strictly in order (its alarm ring is carried in the
-    slot's device state between steps). After every step, slots whose
-    session has nothing ready are freed and refilled from the waiting
-    queue -- new work joins mid-flight, in-flight sessions never stall.
+    scores its chunks strictly in order (its alarm ring and streaming
+    front-end context are carried in the slot's device state between
+    steps and across the in-step replay scan). After every step, slots
+    whose session has nothing ready are freed and refilled from the
+    waiting queue -- new work joins mid-flight, in-flight sessions never
+    stall.
     """
 
     def __init__(
@@ -360,16 +469,24 @@ class SeizureEngine:
         *,
         max_batch: int = 8,
         chunk_windows: int = eeg_data.WINDOWS_PER_MATRIX,
+        replay_depth: int = 1,
+        latency_budget_s: float | None = None,
         mesh: Mesh | None = None,
         use_forest_kernel: bool = False,
+        clock=time.monotonic,
     ):
+        if replay_depth < 1:
+            raise ValueError(f"replay_depth={replay_depth} must be >= 1")
         self.program = program
         self.max_batch = max_batch
         self.chunk_windows = chunk_windows
+        self.replay_depth = replay_depth
+        self.latency_budget_s = latency_budget_s
         self.mesh = mesh
         self.use_forest_kernel = use_forest_kernel
         self.alarm_m = program.cfg.alarm_m
         self.steps = 0  # jitted step invocations (scheduling observability)
+        self._clock = clock
 
         self._sessions: dict[int, StreamSession] = {}
         self._slots: list[StreamSession | None] = [None] * max_batch
@@ -388,7 +505,10 @@ class SeizureEngine:
                 )
             data = NamedSharding(mesh, P("data"))
             repl = NamedSharding(mesh, P())
-            state_sh = EngineState(rings=data, ring_pos=data, alarm=data)
+            state_sh = EngineState(
+                rings=data, ring_pos=data, alarm=data,
+                fe_boundary=data, fe_phase=data,
+            )
             self._state = jax.device_put(self._state, state_sh)
             # Bind the static config via partial: pjit (jax 0.4) rejects
             # kwargs once in_shardings is given.
@@ -411,7 +531,7 @@ class SeizureEngine:
             self._splice = jax.jit(
                 _splice_state,
                 donate_argnums=(0,),
-                in_shardings=(state_sh, repl, repl, repl, repl),
+                in_shardings=(state_sh,) + (repl,) * 6,
                 out_shardings=state_sh,
             )
 
@@ -452,6 +572,11 @@ class SeizureEngine:
         session = self._sessions.get(int(patient_id))
         if session is None:
             return
+        if session.slot is not None:
+            # The device copy of the frontend context is authoritative
+            # while resident: pull it down so re-admitting the zeroed
+            # ring does not also rewind the stream context.
+            self._sync_frontend(session.slot, session)
         session.ring = np.zeros((self.alarm_m,), np.int32)
         session.ring_pos = 0
         session.alarm = 0
@@ -465,28 +590,44 @@ class SeizureEngine:
 
     # -- slot scheduling -----------------------------------------------------
 
+    def _sync_frontend(self, slot: int, session: StreamSession) -> None:
+        """Pull the slot's device frontend context into the session."""
+        boundary, phase = jax.device_get((
+            self._state.fe_boundary[slot], self._state.fe_phase[slot]
+        ))
+        session.fe_boundary = np.asarray(boundary)
+        session.fe_phase = int(phase)
+
     def _evict(self, slot: int) -> None:
-        """Pull the slot's device alarm ring back into the session."""
+        """Pull the slot's device stream state back into the session."""
         session = self._slots[slot]
-        ring, pos, alarm = jax.device_get((  # one host sync, not three
+        ring, pos, alarm, boundary, phase = jax.device_get((
+            # one host sync, not five
             self._state.rings[slot],
             self._state.ring_pos[slot],
             self._state.alarm[slot],
+            self._state.fe_boundary[slot],
+            self._state.fe_phase[slot],
         ))
         session.ring = np.asarray(ring)
         session.ring_pos = int(pos)
         session.alarm = int(alarm)
+        session.fe_boundary = np.asarray(boundary)
+        session.fe_phase = int(phase)
         session.slot = None
         self._slots[slot] = None
 
     def _admit(self, slot: int, session: StreamSession) -> None:
-        """Splice the session's saved alarm ring into the slot's state."""
+        """Splice the session's saved stream state (alarm ring + frontend
+        context) into the slot's device state."""
         self._state = self._splice(
             self._state,
             jnp.asarray(slot, jnp.int32),
             jnp.asarray(session.ring, jnp.int32),
             jnp.asarray(session.ring_pos, jnp.int32),
             jnp.asarray(session.alarm, jnp.int32),
+            jnp.asarray(session.fe_boundary, jnp.float32),
+            jnp.asarray(session.fe_phase, jnp.int32),
         )
         session.slot = slot
         session.queued = False
@@ -502,13 +643,31 @@ class SeizureEngine:
 
     # -- serving -------------------------------------------------------------
 
+    def _deadline_exceeded(self) -> bool:
+        """True iff the latency budget is set and the OLDEST queued chunk
+        (across every session, resident or waiting) has outlived it."""
+        if self.latency_budget_s is None:
+            return False
+        oldest = min(
+            (s.chunks[0][0] for s in self._sessions.values() if s.chunks),
+            default=None,
+        )
+        return (
+            oldest is not None
+            and self._clock() - oldest >= self.latency_budget_s
+        )
+
     def poll(self, *, drain: bool = True) -> list:
         """Score ready chunks and return the resulting events.
 
         drain=True (default) scores EVERYTHING ready, zero-padding a final
         partial batch. drain=False runs only full batches -- leftovers wait
-        for future pushes to pack densely (throughput mode); call
-        ``poll()`` (or ``drain=True``) to flush the tail.
+        for future pushes to pack densely (throughput mode) UNLESS the
+        engine's ``latency_budget_s`` is set and the oldest queued chunk
+        has already waited past it, in which case the partial batch is
+        flushed anyway (the deadline-based middle ground between
+        per-chunk dispatch and unbounded tail latency). Call ``poll()``
+        (or ``drain=True``) to flush the tail unconditionally.
         """
         events: list = []
         while True:
@@ -517,21 +676,40 @@ class SeizureEngine:
                 i for i, s in enumerate(self._slots)
                 if s is not None and s.chunks
             ]
-            if not active or (not drain and len(active) < self.max_batch):
+            if not active:
+                break
+            if (
+                not drain
+                and len(active) < self.max_batch
+                and not self._deadline_exceeded()
+            ):
                 break
             events.extend(self._step_once(active))
         return events
 
     def _step_once(self, active: list[int]) -> list:
+        # Bucket the replay depth to the deepest ready backlog: shallow
+        # traffic (the common steady-state, one chunk per slot) compiles
+        # and runs the depth-1 program; a catch-up burst uses a deeper
+        # bucket. At most ``replay_depth`` distinct compilations.
+        depth = min(
+            self.replay_depth,
+            max(len(self._slots[i].chunks) for i in active),
+        )
         batch = np.zeros(
-            (self.max_batch, self.chunk_windows, eeg_data.N_CHANNELS,
+            (self.max_batch, depth, self.chunk_windows, eeg_data.N_CHANNELS,
              eeg_data.WINDOW),
             np.float32,
         )
-        mask = np.zeros((self.max_batch,), np.int32)
+        mask = np.zeros((self.max_batch, depth), np.int32)
+        popped: dict[int, int] = {}
         for i in active:
-            batch[i] = self._slots[i].chunks.popleft()
-            mask[i] = 1
+            session = self._slots[i]
+            take = min(depth, len(session.chunks))
+            for j in range(take):
+                _, batch[i, j] = session.chunks.popleft()
+                mask[i, j] = 1
+            popped[i] = take
         program = self.program
         self._state, votes, frac, alarm, preds = self._step(
             self._state, jnp.asarray(batch), jnp.asarray(mask),
@@ -543,20 +721,25 @@ class SeizureEngine:
         events: list = []
         for i in active:
             session = self._slots[i]
-            prev_alarm, session.alarm = session.alarm, int(alarm[i])
-            events.append(ChunkScored(
-                patient_id=session.patient_id,
-                chunk_index=session.chunk_seq,
-                chunk_pred=int(votes[i]),
-                preictal_frac=float(frac[i]),
-                alarm=session.alarm,
-                window_preds=np.asarray(preds[i]),
-            ))
-            if session.alarm > prev_alarm:
-                events.append(AlarmRaised(session.patient_id, session.chunk_seq))
-            elif session.alarm < prev_alarm:
-                events.append(AlarmCleared(session.patient_id, session.chunk_seq))
-            session.chunk_seq += 1
+            for j in range(popped[i]):
+                prev_alarm, session.alarm = session.alarm, int(alarm[i, j])
+                events.append(ChunkScored(
+                    patient_id=session.patient_id,
+                    chunk_index=session.chunk_seq,
+                    chunk_pred=int(votes[i, j]),
+                    preictal_frac=float(frac[i, j]),
+                    alarm=session.alarm,
+                    window_preds=np.asarray(preds[i, j]),
+                ))
+                if session.alarm > prev_alarm:
+                    events.append(
+                        AlarmRaised(session.patient_id, session.chunk_seq)
+                    )
+                elif session.alarm < prev_alarm:
+                    events.append(
+                        AlarmCleared(session.patient_id, session.chunk_seq)
+                    )
+                session.chunk_seq += 1
         return events
 
     def score_chunks(self, chunks) -> tuple[jax.Array, jax.Array, jax.Array]:

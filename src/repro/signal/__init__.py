@@ -1,5 +1,6 @@
-"""EEG signal-processing substrate (MSPCA, DWT/WPD, features, pipeline)."""
+"""EEG signal-processing substrate (MSPCA, DWT/WPD, features, streaming
+front-end, pipeline)."""
 
-from repro.signal import eeg_data, features, mspca, pipeline, wavelet
+from repro.signal import eeg_data, features, frontend, mspca, pipeline, wavelet
 
-__all__ = ["eeg_data", "features", "mspca", "pipeline", "wavelet"]
+__all__ = ["eeg_data", "features", "frontend", "mspca", "pipeline", "wavelet"]

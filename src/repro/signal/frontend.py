@@ -1,0 +1,204 @@
+"""Streaming signal front-end: the scoring path's map phase as a scan.
+
+The paper's deployment (Sec. 2.6) is a *continuous* EEG monitor, but the
+original ``pipeline.process_windows`` was a stateless batch function --
+every chunk re-derived its denoise context and a backlogged stream had to
+re-enter the pipeline once per chunk. This module restructures that stage
+into an explicit streaming transition:
+
+  * ``FrontendState``  -- the carried per-stream context: the previous
+    chunk's boundary window (the denoise/WPD context a cross-chunk
+    overlap consumes) and the running chunk phase.
+  * ``frontend_step``  -- the pure transition
+    ``(state, chunk_windows) -> (state, features)``: MSPCA-denoise one
+    8-minute matrix (``mspca.denoise_windows``, the single chunk-shaped
+    entry point) and extract WPD feature rows (``features.wpd_features``).
+  * ``scan_stream``    -- ``lax.scan`` of ``frontend_step`` over a
+    chunk-aligned stream. ``pipeline.process_windows`` is this scan;
+    the serving engine scans the same transition over each slot's
+    backlog INSIDE its jitted step (``serving.api``).
+  * ``StreamingFrontend`` -- host-side incremental wrapper: feed raw
+    windows in arbitrary split sizes, get feature rows back per
+    completed chunk, bit-identical to the one-shot batch path.
+
+Because the paper denoises each 8-minute matrix independently (that is
+what makes the map phase embarrassingly parallel), the transition is
+exact: scanning ``frontend_step`` over any chunk-aligned split of a
+recording reproduces the one-shot batch features bit-for-bit (pinned by
+``tests/test_frontend.py``). The carried boundary window does not feed
+the current chunk's features yet -- it is the seam the ROADMAP's
+overlapping-denoise follow-on plugs into without another engine-state
+migration.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.signal import eeg_data, features, mspca
+
+
+class FrontendState(NamedTuple):
+    """Carried per-stream signal context (one stream; vmap for batches).
+
+    boundary : (C, N) float32 -- the last raw window of the previous
+               chunk (zeros before the first chunk). Cross-chunk denoise
+               context for the streaming path; carried, not yet consumed.
+    phase    : () int32 -- chunks processed so far (the running chunk
+               phase; the engine's per-slot copy survives slot eviction).
+    """
+
+    boundary: jax.Array
+    phase: jax.Array
+
+
+def init_state(
+    n_channels: int = eeg_data.N_CHANNELS, window: int = eeg_data.WINDOW
+) -> FrontendState:
+    """Zero context: a stream that has not produced a chunk yet."""
+    return FrontendState(
+        boundary=jnp.zeros((n_channels, window), jnp.float32),
+        phase=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_batch(
+    batch: int,
+    n_channels: int = eeg_data.N_CHANNELS,
+    window: int = eeg_data.WINDOW,
+) -> FrontendState:
+    """(B,)-leading zero states: one per engine slot."""
+    return FrontendState(
+        boundary=jnp.zeros((batch, n_channels, window), jnp.float32),
+        phase=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def chunk_features(chunk_windows: jax.Array, cfg) -> jax.Array:
+    """(W, C, N) chunk -> (W, F) feature rows: the stateless core of one
+    frontend step (denoise the chunk's 8-minute matrices, WPD-featurize
+    each window). Both scoring paths -- the scanned stream and the
+    engine's stateless ``score_chunks`` -- run THIS function, so they
+    cannot drift. ``cfg`` is a static ``pipeline.PipelineConfig``.
+
+    W is usually exactly ``WINDOWS_PER_MATRIX`` (one denoise matrix,
+    no padding). Other chunk sizes keep the historical
+    ``process_windows`` semantics: the chunk is wrap-padded by cyclic
+    tiling to whole ``WINDOWS_PER_MATRIX``-window matrices, so an engine
+    configured with a nonstandard ``chunk_windows`` denoises the same
+    2048 x 180 matrix shape the training statistics were computed from
+    (train/serve consistency) and scores bit-identically to the
+    pre-scan engine.
+    """
+    if cfg.denoise:
+        w, c, n = chunk_windows.shape
+        per = eeg_data.WINDOWS_PER_MATRIX
+        n_mat = max(1, -(-w // per))
+        pad = n_mat * per - w
+        padded = (
+            jnp.resize(chunk_windows, (n_mat * per, c, n)) if pad
+            else chunk_windows
+        )
+        den = jax.vmap(
+            lambda m: mspca.denoise_windows(
+                m, level=cfg.mspca_level, wavelet_name=cfg.wavelet
+            )
+        )(padded.reshape(n_mat, per, c, n))
+        chunk_windows = den.reshape(n_mat * per, c, n)[:w]
+    return features.wpd_features(
+        chunk_windows, level=cfg.wpd_level, wavelet_name=cfg.wavelet,
+        use_kernel=cfg.use_kernel,
+    )
+
+
+def frontend_step(
+    state: FrontendState, chunk_windows: jax.Array, cfg
+) -> tuple[FrontendState, jax.Array]:
+    """The pure streaming transition: consume one (W, C, N) chunk.
+
+    Returns the advanced state (boundary window, phase + 1) and the
+    chunk's (W, F) feature rows. Per-chunk denoise is independent
+    (paper Sec. 2.6), so scanning this over a chunk-aligned stream is
+    bit-identical to the one-shot batch featurization.
+    """
+    feats = chunk_features(chunk_windows, cfg)
+    new_state = FrontendState(
+        boundary=chunk_windows[-1].astype(jnp.float32),
+        phase=state.phase + 1,
+    )
+    return new_state, feats
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def scan_stream(
+    state: FrontendState, chunks: jax.Array, cfg
+) -> tuple[FrontendState, jax.Array]:
+    """Scan ``frontend_step`` over a (n_chunks, W, C, N) stream.
+
+    Returns the final state and (n_chunks, W, F) feature rows. This is
+    the implementation of ``pipeline.process_windows`` (which flattens
+    the chunk axis back out) and the single-slot view of the serving
+    engine's backlog-replay scan.
+    """
+    return jax.lax.scan(
+        lambda s, ch: frontend_step(s, ch, cfg), state, chunks
+    )
+
+
+class StreamingFrontend:
+    """Host-side incremental featurizer (the continuous-monitor shape).
+
+    Feed raw windows in ANY split sizes; each completed
+    ``chunk_windows``-window chunk is featurized through one
+    ``frontend_step`` with the carried state, so the concatenated output
+    over a session equals the one-shot ``pipeline.process_windows`` of
+    the same stream bit-for-bit. Partial chunks stay buffered (use
+    ``pending_windows`` to inspect).
+    """
+
+    def __init__(self, cfg, chunk_windows: int = eeg_data.WINDOWS_PER_MATRIX):
+        self.cfg = cfg
+        self.chunk_windows = chunk_windows
+        self.state = init_state()
+        self._buf = np.zeros(
+            (0, eeg_data.N_CHANNELS, eeg_data.WINDOW), np.float32
+        )
+
+    @property
+    def pending_windows(self) -> int:
+        return int(self._buf.shape[0])
+
+    @property
+    def chunks_seen(self) -> int:
+        return int(self.state.phase)
+
+    def feed(self, windows) -> np.ndarray:
+        """Buffer raw (W, C, N) windows; featurize every completed chunk.
+
+        Returns (k * chunk_windows, F) feature rows for the k chunks this
+        call completed (k may be 0: shape (0, F))."""
+        windows = np.asarray(windows, np.float32)
+        if windows.ndim == 2:
+            windows = windows[None]
+        self._buf = (
+            np.concatenate([self._buf, windows]) if self._buf.size
+            else windows.copy()
+        )
+        per = self.chunk_windows
+        n_ready = self._buf.shape[0] // per
+        if n_ready == 0:
+            return np.zeros(
+                (0, features.feature_dim(eeg_data.N_CHANNELS, self.cfg.wpd_level)),
+                np.float32,
+            )
+        ready = self._buf[: n_ready * per].reshape(
+            n_ready, per, *self._buf.shape[1:]
+        )
+        self._buf = self._buf[n_ready * per :]
+        self.state, feats = scan_stream(self.state, jnp.asarray(ready), self.cfg)
+        return np.asarray(feats).reshape(n_ready * per, -1)

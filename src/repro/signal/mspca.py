@@ -92,6 +92,27 @@ def denoise(
     return xd + mean
 
 
+@functools.partial(jax.jit, static_argnames=("level", "wavelet_name"))
+def denoise_windows(
+    windows: jax.Array, level: int = 5, wavelet_name: str = "db4"
+) -> jax.Array:
+    """(W, C, N) raw windows -> (W, C, N) denoised: one 8-minute matrix.
+
+    The paper's chunk-shaped entry point (Sec. 2.6): the W*C
+    channel-windows become the columns of an N x (W*C) data matrix
+    (2048 x 180 when W == 60, C == 3), ``denoise`` runs on that layout,
+    and the result is folded back to windows. This is the SINGLE
+    implementation both scoring paths share -- ``signal.frontend``'s
+    streaming transition and (through it) the batch
+    ``pipeline.process_windows`` -- so the matrix layout cannot drift
+    between them.
+    """
+    w, c, n = windows.shape
+    mat = windows.transpose(2, 0, 1).reshape(n, w * c)
+    den = denoise(mat, level=level, wavelet_name=wavelet_name)
+    return den.reshape(n, w, c).transpose(1, 2, 0)
+
+
 def snr_db(clean: jax.Array, noisy: jax.Array) -> jax.Array:
     """Diagnostic: SNR of ``noisy`` against ``clean`` in dB."""
     err = noisy - clean

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core import forest_trainer
 from repro.core import mapreduce as mr
 from repro.core import rotation_forest as rf
-from repro.signal import eeg_data, features, mspca
+from repro.signal import eeg_data, features, frontend
 
 
 class PipelineConfig(NamedTuple):
@@ -53,38 +53,34 @@ class FittedPipeline(NamedTuple):
 def process_windows(windows: jax.Array, cfg: PipelineConfig) -> jax.Array:
     """(W, C, N) raw windows -> (W, F) feature rows.
 
-    Denoising operates on the paper's 2048 x (W*C) matrix layout: samples
-    are rows, channel-windows are columns (the 2048 x 180 matrices of
-    Sec. 2.6 when W == 60, C == 3).
+    The batch view of the streaming front-end: the recording is split
+    into 8-minute chunks and ``frontend.frontend_step`` is scanned over
+    them (each step denoises one of the paper's 2048 x (W*C) matrices --
+    2048 x 180 when the chunk holds 60 windows x 3 channels -- NOT the
+    whole recording at once: local PCA keeps train/test statistics
+    consistent and is what makes the map phase embarrassingly parallel).
+    Bit-identical to featurizing the same stream incrementally through
+    ``frontend.StreamingFrontend`` or the serving engine's backlog scan.
     """
     w, c, n = windows.shape
-    if cfg.denoise:
-        # Denoise per 8-minute matrix exactly as the paper does (2048 x 180
-        # when the chunk holds 60 windows x 3 channels) -- NOT over the
-        # whole recording at once: local PCA keeps train/test statistics
-        # consistent and is what makes the map phase embarrassingly
-        # parallel. Short recordings are padded by wrapping.
-        per = eeg_data.WINDOWS_PER_MATRIX
-        n_mat = max(1, -(-w // per))
-        pad = n_mat * per - w
-        # Wrap-pad by cyclic tiling: jnp.resize repeats whole rows in
-        # order, which equals concatenate([windows, windows[:pad]]) when
-        # pad <= w and keeps working when the recording is shorter than
-        # one chunk (pad > w, where the concatenate form under-fills).
-        padded = jnp.resize(windows, (n_mat * per, c, n)) if pad else windows
-        mats = padded.reshape(n_mat, per, c, n).transpose(0, 3, 1, 2).reshape(
-            n_mat, n, per * c
+    if not cfg.denoise:
+        # No cross-window context at all without denoise: featurize rows
+        # directly through the shared chunk-shaped entry point.
+        return features.wpd_features(
+            windows, level=cfg.wpd_level, wavelet_name=cfg.wavelet,
+            use_kernel=cfg.use_kernel,
         )
-        den = jax.vmap(
-            lambda m: mspca.denoise(m, level=cfg.mspca_level, wavelet_name=cfg.wavelet)
-        )(mats)
-        windows = (
-            den.reshape(n_mat, n, per, c).transpose(0, 2, 3, 1).reshape(-1, c, n)[:w]
-        )
-    return features.wpd_features(
-        windows, level=cfg.wpd_level, wavelet_name=cfg.wavelet,
-        use_kernel=cfg.use_kernel,
-    )
+    per = eeg_data.WINDOWS_PER_MATRIX
+    n_mat = max(1, -(-w // per))
+    pad = n_mat * per - w
+    # Wrap-pad by cyclic tiling: jnp.resize repeats whole rows in
+    # order, which equals concatenate([windows, windows[:pad]]) when
+    # pad <= w and keeps working when the recording is shorter than
+    # one chunk (pad > w, where the concatenate form under-fills).
+    padded = jnp.resize(windows, (n_mat * per, c, n)) if pad else windows
+    chunks = padded.reshape(n_mat, per, c, n)
+    _, feats = frontend.scan_stream(frontend.init_state(c, n), chunks, cfg)
+    return feats.reshape(n_mat * per, -1)[:w]
 
 
 def process_recording_mapreduce(
@@ -176,11 +172,21 @@ def chunk_predictions(window_preds: jax.Array, cfg: PipelineConfig) -> jax.Array
 
 def alarm_state(chunk_preds: jax.Array, cfg: PipelineConfig) -> jax.Array:
     """The 3-of-5 rule: alarm at chunk t iff >= alarm_k of the last
-    alarm_m chunk predictions (inclusive) are preictal."""
+    alarm_m chunk predictions (inclusive) are preictal.
+
+    Rolling sum via a lagged cumsum difference -- ONE pass over the
+    stream instead of the historical ``jnp.stack`` of m shifted copies
+    (which unrolled m gathers at trace time and materialized an (m, n)
+    intermediate). Integer arithmetic, so the cumsum formulation is
+    bit-identical to the stacked one (pinned in tests/test_signal.py).
+    """
     m, k = cfg.alarm_m, cfg.alarm_k
-    padded = jnp.concatenate([jnp.zeros((m - 1,), jnp.int32), chunk_preds])
-    windows = jnp.stack([padded[i : i + chunk_preds.shape[0]] for i in range(m)])
-    return (jnp.sum(windows, axis=0) >= k).astype(jnp.int32)
+    preds = chunk_preds.astype(jnp.int32)
+    csum = jnp.cumsum(preds)
+    # lagged[t] = csum[t - m] (0 while the window is still filling), so
+    # csum - lagged = sum of the last m predictions inclusive of t.
+    lagged = jnp.concatenate([jnp.zeros((m,), jnp.int32), csum])[: preds.shape[0]]
+    return ((csum - lagged) >= k).astype(jnp.int32)
 
 
 class TimelineResult(NamedTuple):
@@ -236,14 +242,18 @@ def evaluate_timeline(
     Offline eval and serving share one code path: the stream is pushed
     through a single-slot ``serving.SeizureEngine`` session, so the chunk
     votes and alarms here are BY CONSTRUCTION what the serving engine
-    emits. Trailing windows that do not fill a chunk are scored for
-    ``window_preds`` only (self-wrapped denoise context, matching what a
-    live session would see), exactly as ``chunk_predictions`` drops them.
+    emits. The whole recording arrives as one backlog, so the engine
+    replays it through the in-step ``lax.scan`` (``replay_depth``
+    chunks per jitted dispatch -- the bulk-replay path; per-chunk events
+    are byte-identical to depth-1 scoring). Trailing windows that do not
+    fill a chunk are scored for ``window_preds`` only (self-wrapped
+    denoise context, matching what a live session would see), exactly as
+    ``chunk_predictions`` drops them.
     """
     from repro.serving import api  # deferred: serving.api imports us
 
     program = api.ScoringProgram.from_fitted(fitted, cfg)
-    engine = api.SeizureEngine(program, max_batch=1)
+    engine = api.SeizureEngine(program, max_batch=1, replay_depth=8)
     session = engine.open_session(0)
     session.push(recording.windows)
     scored = [e for e in engine.poll() if isinstance(e, api.ChunkScored)]

@@ -1,0 +1,367 @@
+"""The streaming front-end refactor's oracle tests.
+
+Two bit-exactness contracts pin the scan refactor:
+
+  (a) ``frontend.frontend_step`` scanned over ANY chunk-aligned split of
+      a stream (incrementally, carrying ``FrontendState``) matches the
+      one-shot ``pipeline.process_windows`` batch oracle bit-for-bit.
+  (b) a backlogged ``SeizureEngine`` session scored with
+      ``replay_depth > 1`` (the in-step ``lax.scan`` over the backlog)
+      emits byte-identical events to ``replay_depth = 1`` (the PR-3
+      chunk-per-step schedule).
+
+Seeded deterministic variants always run; the hypothesis twins drive the
+same checkers with drawn split points / stream shapes when hypothesis is
+available (CI installs it). The deadline-based partial flush and the
+on-device frontend-context splice are covered here too.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.signal import eeg_data, frontend, pipeline
+from repro.serving import api
+
+from test_seizure_engine import (  # noqa: F401  (imported fixtures)
+    chunk_pool,
+    fitted,
+    program,
+    small_cfg,
+    timeline,
+)
+
+PER = eeg_data.WINDOWS_PER_MATRIX
+
+
+@pytest.fixture(scope="module")
+def stream3():
+    """A 3-chunk raw stream (the frontend needs no fitted forest)."""
+    return np.asarray(eeg_data.generate_windows(
+        jax.random.PRNGKey(5), jnp.asarray(3), eeg_data.INTERICTAL, 3 * PER
+    ))
+
+
+@pytest.fixture(scope="module")
+def signal_cfg():
+    return pipeline.PipelineConfig()
+
+
+# ---------------------------------------------------------------------------
+# (a) scanned frontend == one-shot batch oracle
+# ---------------------------------------------------------------------------
+
+def check_split_matches_oneshot(stream, cfg, split_sizes):
+    """Feed ``stream`` through a StreamingFrontend in ``split_sizes``
+    pieces; the concatenated features must equal the one-shot
+    ``process_windows`` bit-for-bit (and the tail must stay buffered)."""
+    one_shot = np.asarray(pipeline.process_windows(jnp.asarray(stream), cfg))
+    sf = frontend.StreamingFrontend(cfg)
+    outs, i = [], 0
+    for n in split_sizes:
+        outs.append(sf.feed(stream[i : i + n]))
+        i += n
+    assert i == stream.shape[0], "split sizes must cover the stream"
+    got = np.concatenate(outs)
+    aligned = (stream.shape[0] // PER) * PER
+    assert got.shape == (aligned, one_shot.shape[1])
+    np.testing.assert_array_equal(got, one_shot[:aligned])
+    assert sf.pending_windows == stream.shape[0] - aligned
+    assert sf.chunks_seen == aligned // PER
+
+
+class TestScanMatchesOneShot:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_random_splits(self, stream3, signal_cfg, seed):
+        rng = np.random.RandomState(seed)
+        sizes, left = [], stream3.shape[0]
+        while left:
+            n = int(rng.randint(1, 100))
+            sizes.append(min(n, left))
+            left -= sizes[-1]
+        check_split_matches_oneshot(stream3, signal_cfg, sizes)
+
+    def test_whole_chunk_splits(self, stream3, signal_cfg):
+        check_split_matches_oneshot(stream3, signal_cfg, [PER] * 3)
+
+    def test_single_push_with_tail(self, stream3, signal_cfg):
+        check_split_matches_oneshot(stream3[: 2 * PER + 17], signal_cfg,
+                                    [2 * PER + 17])
+
+    def test_scan_stream_equals_process_windows(self, stream3, signal_cfg):
+        # The jitted scan itself (no host buffering) against the batch
+        # path -- this is literally what process_windows now runs, so it
+        # doubles as a regression pin for the state-threading.
+        chunks = jnp.asarray(stream3).reshape(3, PER, *stream3.shape[1:])
+        state = frontend.init_state()
+        state, feats = frontend.scan_stream(state, chunks, signal_cfg)
+        np.testing.assert_array_equal(
+            np.asarray(feats).reshape(3 * PER, -1),
+            np.asarray(pipeline.process_windows(
+                jnp.asarray(stream3), signal_cfg
+            )),
+        )
+        assert int(state.phase) == 3
+        np.testing.assert_array_equal(
+            np.asarray(state.boundary), stream3[-1]
+        )
+
+    def test_frontend_step_advances_state(self, stream3, signal_cfg):
+        state = frontend.init_state()
+        chunk = jnp.asarray(stream3[:PER])
+        state, feats = frontend.frontend_step(state, chunk, signal_cfg)
+        assert int(state.phase) == 1
+        np.testing.assert_array_equal(
+            np.asarray(state.boundary), stream3[PER - 1]
+        )
+        assert feats.shape[0] == PER
+
+    def test_denoise_off_path(self, stream3):
+        cfg = pipeline.PipelineConfig(denoise=False)
+        check_split_matches_oneshot(stream3[: PER + 30], cfg, [PER + 30])
+
+
+# ---------------------------------------------------------------------------
+# (b) backlog replay: depth > 1 is byte-identical to depth 1
+# ---------------------------------------------------------------------------
+
+def events_key(events):
+    """Serialize an event stream for byte-exact comparison."""
+    out = []
+    for e in events:
+        if isinstance(e, api.ChunkScored):
+            out.append((
+                "scored", e.patient_id, e.chunk_index, e.chunk_pred,
+                e.preictal_frac, e.alarm, e.window_preds.tobytes(),
+            ))
+        else:
+            out.append((type(e).__name__, e.patient_id, e.chunk_index))
+    return out
+
+
+def check_replay_depth_equivalence(program, pool, chunk_idxs, depth):
+    """One backlogged session, scored chunk-per-step vs replay-scanned:
+    event streams must be byte-identical, with the scanned engine using
+    ceil(n / depth) steps."""
+    stream = np.concatenate([pool[i] for i in chunk_idxs])
+    runs = {}
+    for d in (1, depth):
+        engine = api.SeizureEngine(program, max_batch=1, replay_depth=d)
+        session = engine.open_session(0)
+        session.push(stream)
+        runs[d] = (events_key(engine.poll()), engine.steps)
+    n = len(chunk_idxs)
+    assert runs[1][1] == n  # the PR-3 schedule: one chunk per step
+    assert runs[depth][1] == -(-n // depth)
+    assert runs[1][0] == runs[depth][0]
+
+
+class TestBacklogReplay:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_seeded_backlogs(self, program, chunk_pool, seed):
+        rng = np.random.RandomState(100 + seed)
+        idxs = [int(i) for i in rng.randint(0, 2, size=rng.randint(2, 8))]
+        check_replay_depth_equivalence(
+            program, chunk_pool, idxs, depth=int(rng.randint(2, 5))
+        )
+
+    def test_depth_deeper_than_backlog(self, program, chunk_pool):
+        # depth 4 > 2 queued chunks: the step buckets down to depth 2.
+        check_replay_depth_equivalence(program, chunk_pool, [1, 1], depth=4)
+
+    def test_multi_patient_replay_matches_oracle(self, program, chunk_pool):
+        # Two sessions with unequal backlogs ride the same scanned steps
+        # (the shallower one masks out); per-session streams must equal
+        # the depth-1 reference.
+        quiet, pre = chunk_pool
+        backlogs = {0: [pre] * 5, 1: [quiet, pre]}
+        runs = {}
+        for d in (1, 3):
+            engine = api.SeizureEngine(program, max_batch=2, replay_depth=d)
+            for pid, chunks in backlogs.items():
+                engine.open_session(pid).push(np.concatenate(chunks))
+            per_pid = {pid: [] for pid in backlogs}
+            for e in engine.poll():
+                if isinstance(e, api.ChunkScored):
+                    per_pid[e.patient_id].append(
+                        (e.chunk_index, e.chunk_pred, e.alarm,
+                         e.window_preds.tobytes())
+                    )
+            runs[d] = (per_pid, engine.steps)
+        assert runs[1][0] == runs[3][0]
+        assert runs[3][1] == 2  # ceil(5 / 3): the deep backlog rules
+        assert runs[1][1] == 5
+
+    def test_frontend_phase_survives_slot_eviction(self, program, chunk_pool):
+        # One slot, two alternating patients: every chunk evicts and
+        # readmits a session; the frontend context must survive the trip
+        # through host storage (phase keeps counting per session).
+        quiet, pre = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=1)
+        p = engine.open_session(0)
+        q = engine.open_session(1)
+        for _ in range(3):
+            p.push(pre)
+            q.push(quiet)
+            engine.poll()
+        for session, last in ((p, pre), (q, quiet)):
+            if session.slot is not None:
+                engine._evict(session.slot)
+            assert session.fe_phase == 3
+            np.testing.assert_array_equal(session.fe_boundary, last[-1])
+
+    def test_nonstandard_chunk_windows_matches_pipeline_oracle(
+        self, program, fitted, chunk_pool
+    ):
+        # chunk_windows != WINDOWS_PER_MATRIX must keep the historical
+        # semantics: each sub-chunk is wrap-padded to the paper's full
+        # denoise matrix, i.e. the engine's window predictions equal the
+        # batch pipeline run on each chunk -- including under replay.
+        quiet, pre = chunk_pool
+        stream = np.concatenate([quiet, pre])  # 120 windows -> 4 x 30
+        cw = 30
+        engine = api.SeizureEngine(
+            program, max_batch=1, chunk_windows=cw, replay_depth=2
+        )
+        engine.open_session(0).push(stream)
+        scored = [
+            e for e in engine.poll() if isinstance(e, api.ChunkScored)
+        ]
+        assert len(scored) == 4
+        for j, e in enumerate(scored):
+            want = pipeline.predict_windows(
+                fitted, jnp.asarray(stream[j * cw : (j + 1) * cw]),
+                program.cfg,
+            )
+            np.testing.assert_array_equal(
+                e.window_preds, np.asarray(want, np.int32)
+            )
+
+    def test_replay_respects_session_fifo(self, program, chunk_pool):
+        quiet, pre = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=1, replay_depth=4)
+        s = engine.open_session(7)
+        s.push(np.concatenate([quiet, pre, quiet]))
+        scored = [e for e in engine.poll() if isinstance(e, api.ChunkScored)]
+        assert [e.chunk_index for e in scored] == [0, 1, 2]
+        assert engine.steps == 1
+
+
+# ---------------------------------------------------------------------------
+# Deadline-based partial flush
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+
+class TestLatencyBudget:
+    def test_partial_batch_flushes_after_deadline(self, program, chunk_pool):
+        quiet, _ = chunk_pool
+        clock = FakeClock()
+        engine = api.SeizureEngine(
+            program, max_batch=2, latency_budget_s=5.0, clock=clock
+        )
+        engine.open_session(0).push(quiet)
+        # Fresh chunk, batch not full: drain=False defers (dense-batch
+        # behavior preserved under the budget).
+        assert engine.poll(drain=False) == []
+        assert engine.steps == 0
+        clock.now = 6.0  # the queued chunk is now older than the budget
+        scored = [
+            e for e in engine.poll(drain=False)
+            if isinstance(e, api.ChunkScored)
+        ]
+        assert len(scored) == 1 and engine.steps == 1
+
+    def test_full_batch_never_waits(self, program, chunk_pool):
+        quiet, _ = chunk_pool
+        clock = FakeClock()
+        engine = api.SeizureEngine(
+            program, max_batch=2, latency_budget_s=1e9, clock=clock
+        )
+        for pid in range(2):
+            engine.open_session(pid).push(quiet)
+        assert len(engine.poll(drain=False)) == 2  # full batch runs at once
+
+    def test_no_budget_keeps_pr2_semantics(self, program, chunk_pool):
+        quiet, _ = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=2)
+        engine.open_session(0).push(quiet)
+        assert engine.poll(drain=False) == []   # waits indefinitely
+        assert len(engine.poll()) == 1          # explicit drain flushes
+
+    def test_one_stale_chunk_flushes_whole_partial_batch(
+        self, program, chunk_pool
+    ):
+        # One chunk past its deadline flushes the partial batch; fresher
+        # ready chunks ride along instead of waiting for a full batch.
+        quiet, pre = chunk_pool
+        clock = FakeClock()
+        engine = api.SeizureEngine(
+            program, max_batch=3, latency_budget_s=5.0, clock=clock
+        )
+        engine.open_session(0).push(quiet)  # enqueued at t=0
+        clock.now = 6.0
+        engine.open_session(1).push(pre)    # enqueued at t=6, still fresh
+        scored = [
+            e for e in engine.poll(drain=False)
+            if isinstance(e, api.ChunkScored)
+        ]
+        assert sorted(e.patient_id for e in scored) == [0, 1]
+        assert engine.steps == 1
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis twins (drawn inputs through the same checkers)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # CI installs hypothesis; local runs may lack it
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(
+        max_examples=5,
+        deadline=None,
+        derandomize=True,
+        suppress_health_check=list(HealthCheck),
+    )
+    @given(data=st.data())
+    def test_any_chunk_aligned_split_matches_oneshot(
+        stream3, signal_cfg, data
+    ):
+        total = stream3.shape[0]
+        sizes, left = [], total
+        while left > 0:
+            n = data.draw(st.integers(1, min(120, left)), label="split")
+            sizes.append(n)
+            left -= n
+        check_split_matches_oneshot(stream3, signal_cfg, sizes)
+
+    @settings(
+        max_examples=5,
+        deadline=None,
+        derandomize=True,
+        suppress_health_check=list(HealthCheck),
+    )
+    @given(data=st.data())
+    def test_any_backlog_replay_depth_equivalent(program, chunk_pool, data):
+        idxs = data.draw(
+            st.lists(st.integers(0, 1), min_size=1, max_size=6),
+            label="backlog",
+        )
+        depth = data.draw(st.integers(2, 4), label="replay_depth")
+        check_replay_depth_equivalence(program, chunk_pool, idxs, depth)

@@ -180,6 +180,37 @@ class TestScoringProgram:
         with pytest.raises(FileNotFoundError):
             api.ScoringProgram.load(str(tmp_path))
 
+    def test_union_forest_streams_to_engine_on_device(self, small_cfg):
+        # ROADMAP follow-on: a fit_mapreduce union forest must lower into
+        # a served ScoringProgram WITHOUT leaving the device -- packing
+        # (rotation_forest.pack -> kernels.forest.pack_forest) is jitted
+        # gathers, and the engine scores a device-resident batch without
+        # any implicit host round-trip. jax.transfer_guard turns any
+        # such transfer into an error.
+        rec = eeg_data.make_training_set(
+            jax.random.PRNGKey(3), 1,
+            n_interictal_windows=PER, n_preictal_windows=PER,
+        )
+        rec = eeg_data.stratify_chunks(rec)
+        fitted = pipeline.fit(
+            jax.random.PRNGKey(4), rec, small_cfg, n_shards=2
+        )
+        jax.block_until_ready(fitted)
+        batch = jax.device_put(
+            jnp.asarray(np.asarray(rec.windows[:PER])[None])
+        )
+        jax.block_until_ready(batch)
+        with jax.transfer_guard("disallow"):
+            prog = api.ScoringProgram.from_fitted(fitted, small_cfg)
+            engine = api.SeizureEngine(prog, max_batch=1)
+            votes, frac, preds = engine.score_chunks(batch)
+            jax.block_until_ready((prog.packed, votes, frac, preds))
+        # Sanity: the guarded result matches an unguarded rerun.
+        again, _, _ = api.SeizureEngine(prog, max_batch=1).score_chunks(
+            np.asarray(rec.windows[:PER])[None]
+        )
+        np.testing.assert_array_equal(np.asarray(votes), np.asarray(again))
+
 
 # ---------------------------------------------------------------------------
 # Engine vs the pipeline oracle

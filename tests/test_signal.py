@@ -235,6 +235,29 @@ class TestPipeline:
         # alarm decays once hits leave the window
         assert alarms[8] == 0
 
+    def test_alarm_state_matches_stacked_reference(self, small_cfg):
+        # The rolling-sum (lagged cumsum) alarm_state must be
+        # bit-identical to the historical stacked-shifted-copies
+        # formulation for every stream length and (k, m).
+        def stacked_oracle(chunk_preds, m, k):
+            padded = jnp.concatenate(
+                [jnp.zeros((m - 1,), jnp.int32), chunk_preds]
+            )
+            windows = jnp.stack(
+                [padded[i : i + chunk_preds.shape[0]] for i in range(m)]
+            )
+            return (jnp.sum(windows, axis=0) >= k).astype(jnp.int32)
+
+        rng = np.random.RandomState(0)
+        for n in (1, 2, 4, 5, 9, 37):
+            for m, k in ((5, 3), (3, 2), (1, 1), (7, 7)):
+                cfg = small_cfg._replace(alarm_m=m, alarm_k=k)
+                preds = jnp.asarray(rng.randint(0, 2, size=n), jnp.int32)
+                np.testing.assert_array_equal(
+                    np.asarray(pipeline.alarm_state(preds, cfg)),
+                    np.asarray(stacked_oracle(preds, m, k)),
+                )
+
     def test_timeline_alarm_before_seizure(self, fitted_p3, small_cfg):
         fitted, _ = fitted_p3
         test = eeg_data.make_test_timeline(
