@@ -31,12 +31,23 @@ import sys
 # recorded but, like the other scheduling ratios, swings too much
 # run-to-run to gate at 30%). The speedup-vs-loop/vmap and shard-scaling
 # training rows are recorded for the trajectory but hover near 1.0 on
-# CPU (XLA batches the vmapped scatters).
+# CPU (XLA batches the vmapped scatters). The two mspca/seam rows are
+# the overlap-aware-denoise accuracy gate: fixed keys + deterministic
+# CPU float make them run-to-run stable, so a numerics change that
+# erodes chunked reconstruction quality (baseline or overlap-aware)
+# fails here instead of landing silently. The absolute worst_snr_db
+# rows are gated -- ~18 dB values with a comfortable margin; the tiny
+# snr_gain_db deltas (~0.1 dB) are recorded but NOT gated, since a 30%
+# relative floor on a 0.1 dB difference is within cross-environment
+# eigh drift (the overlap>0-beats-overlap=0 ordering itself is
+# enforced by tests/test_overlap_mspca.py in the test gate).
 DEFAULT_ROWS = [
     "serving/seizure/fused_windows_per_s",
     "serving/seizure/fused_speedup",
     "training/forest/fused_rows_per_s",
     "serving/replay_rows_per_s",
+    "mspca/seam/worst_snr_db/overlap0",
+    "mspca/seam/worst_snr_db/overlap2",
 ]
 
 

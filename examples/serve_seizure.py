@@ -43,12 +43,16 @@ def main() -> None:
     ap.add_argument("--latency-budget", type=float, default=None,
                     help="seconds before a partial batch is flushed "
                          "anyway under poll(drain=False)")
+    ap.add_argument("--overlap", type=int, default=0,
+                    help="cross-chunk MSPCA halo windows (0 = the "
+                         "paper's fully independent chunk denoise)")
     args = ap.parse_args()
 
     cfg = pipeline.PipelineConfig(
         forest=rf.RotationForestConfig(
             n_trees=8, n_subsets=3, depth=5, n_classes=2, n_bins=16
-        )
+        ),
+        overlap=args.overlap,
     )
 
     # One forest serves all patients here (the paper trains per patient;

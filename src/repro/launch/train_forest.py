@@ -51,6 +51,11 @@ def main() -> None:
     ap.add_argument("--latency-budget", type=float, default=None,
                     help="seconds before poll(drain=False) flushes a "
                          "partial batch (default: drain fully each poll)")
+    ap.add_argument("--overlap", type=int, default=0,
+                    help="cross-chunk MSPCA halo windows: each denoise "
+                         "matrix is extended with this many raw windows "
+                         "from the previous chunk (0 = the paper's fully "
+                         "independent chunks)")
     ap.add_argument("--save-dir", default=None,
                     help="ScoringProgram checkpoint dir (default: tmp)")
     ap.add_argument("--use-hist-kernel", action="store_true",
@@ -77,7 +82,8 @@ def main() -> None:
             n_trees=args.trees, n_subsets=3, depth=args.depth,
             n_classes=2, n_bins=args.bins,
             use_hist_kernel=args.use_hist_kernel,
-        )
+        ),
+        overlap=args.overlap,
     )
 
     # ---- map/reduce training on the synthetic Freiburg stand-ins --------

@@ -189,7 +189,7 @@ class EngineState(NamedTuple):
     rings: jax.Array        # (B, m) int32
     ring_pos: jax.Array     # (B,) int32
     alarm: jax.Array        # (B,) int32
-    fe_boundary: jax.Array  # (B, C, N) float32
+    fe_boundary: jax.Array  # (B, max(1, overlap), C, N) float32
     fe_phase: jax.Array     # (B,) int32
 
     def frontend_state(self) -> frontend.FrontendState:
@@ -201,17 +201,18 @@ class EngineState(NamedTuple):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("max_batch", "alarm_m", "n_channels", "window"),
+    static_argnames=("max_batch", "alarm_m", "n_channels", "window", "overlap"),
 )
 def init_state(
     max_batch: int,
     alarm_m: int,
     n_channels: int = eeg_data.N_CHANNELS,
     window: int = eeg_data.WINDOW,
+    overlap: int = 0,
 ) -> EngineState:
     # jitted (all-static) so the zero-fill happens ON device: engine
     # construction stays legal under jax.transfer_guard("disallow").
-    fe = frontend.init_batch(max_batch, n_channels, window)
+    fe = frontend.init_batch(max_batch, n_channels, window, overlap)
     return EngineState(
         rings=jnp.zeros((max_batch, alarm_m), jnp.int32),
         ring_pos=jnp.zeros((max_batch,), jnp.int32),
@@ -288,7 +289,7 @@ def _engine_step(state, chunks, active, packed, feat_mean, feat_std,
         new = EngineState(
             rings=rings, ring_pos=ring_pos, alarm=alarm,
             fe_boundary=jnp.where(
-                act[:, None, None] > 0, fe.boundary, st.fe_boundary
+                act[:, None, None, None] > 0, fe.boundary, st.fe_boundary
             ),
             fe_phase=jnp.where(act > 0, fe.phase, st.fe_phase),
         )
@@ -329,7 +330,7 @@ def _splice_state(
     fe_boundary = jax.lax.dynamic_update_slice(
         state.fe_boundary,
         boundary[None].astype(state.fe_boundary.dtype),
-        (slot, 0, 0),
+        (slot, 0, 0, 0),
     )
     return EngineState(
         rings=rings,
@@ -372,7 +373,8 @@ class StreamSession:
         self.ring_pos = 0
         self.alarm = 0
         self.fe_boundary = np.zeros(
-            (eeg_data.N_CHANNELS, eeg_data.WINDOW), np.float32
+            (engine.fe_width, eeg_data.N_CHANNELS, eeg_data.WINDOW),
+            np.float32,
         )
         self.fe_phase = 0
         self.chunk_seq = 0
@@ -461,6 +463,13 @@ class SeizureEngine:
     whose session has nothing ready are freed and refilled from the
     waiting queue -- new work joins mid-flight, in-flight sessions never
     stall.
+
+    With ``program.cfg.overlap > 0`` each slot's carried frontend
+    context is the (overlap, C, N) raw-window denoise halo: the MSPCA
+    stage of every chunk sees the previous chunk's tail, and the halo
+    payload rides the same evict/admit splice as the alarm ring, so
+    eviction churn cannot perturb the numerics (property-tested in
+    tests/test_engine_properties.py).
     """
 
     def __init__(
@@ -485,13 +494,18 @@ class SeizureEngine:
         self.mesh = mesh
         self.use_forest_kernel = use_forest_kernel
         self.alarm_m = program.cfg.alarm_m
+        # Carried boundary windows per slot (the cross-chunk denoise halo
+        # when cfg.overlap > 0; a single carried-but-unused window else).
+        self.fe_width = frontend.boundary_width(program.cfg.overlap)
         self.steps = 0  # jitted step invocations (scheduling observability)
         self._clock = clock
 
         self._sessions: dict[int, StreamSession] = {}
         self._slots: list[StreamSession | None] = [None] * max_batch
         self._waiting: collections.deque[StreamSession] = collections.deque()
-        self._state = init_state(max_batch, self.alarm_m)
+        self._state = init_state(
+            max_batch, self.alarm_m, overlap=program.cfg.overlap
+        )
 
         if mesh is None:
             self._step = _jit_engine_step

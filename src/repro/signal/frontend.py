@@ -7,12 +7,16 @@ re-enter the pipeline once per chunk. This module restructures that stage
 into an explicit streaming transition:
 
   * ``FrontendState``  -- the carried per-stream context: the previous
-    chunk's boundary window (the denoise/WPD context a cross-chunk
-    overlap consumes) and the running chunk phase.
+    chunk's boundary windows (the cross-chunk denoise halo) and the
+    running chunk phase.
   * ``frontend_step``  -- the pure transition
     ``(state, chunk_windows) -> (state, features)``: MSPCA-denoise one
     8-minute matrix (``mspca.denoise_windows``, the single chunk-shaped
     entry point) and extract WPD feature rows (``features.wpd_features``).
+    With ``cfg.overlap > 0`` the carried boundary windows are prepended
+    to the denoise matrix as halo columns (and discarded after), so the
+    per-scale PCA bases see cross-seam context instead of a hard edge
+    at every chunk boundary.
   * ``scan_stream``    -- ``lax.scan`` of ``frontend_step`` over a
     chunk-aligned stream. ``pipeline.process_windows`` is this scan;
     the serving engine scans the same transition over each slot's
@@ -21,14 +25,15 @@ into an explicit streaming transition:
     windows in arbitrary split sizes, get feature rows back per
     completed chunk, bit-identical to the one-shot batch path.
 
-Because the paper denoises each 8-minute matrix independently (that is
-what makes the map phase embarrassingly parallel), the transition is
-exact: scanning ``frontend_step`` over any chunk-aligned split of a
-recording reproduces the one-shot batch features bit-for-bit (pinned by
-``tests/test_frontend.py``). The carried boundary window does not feed
-the current chunk's features yet -- it is the seam the ROADMAP's
-overlapping-denoise follow-on plugs into without another engine-state
-migration.
+The transition stays exact under overlap: the halo is RAW windows (the
+previous chunk's tail, carried in ``FrontendState``), never denoised
+output, so each step still depends on its predecessor only through that
+small payload -- scanning ``frontend_step`` over any chunk-aligned split
+of a recording reproduces the one-shot batch features bit-for-bit
+(pinned by ``tests/test_frontend.py`` / ``tests/test_overlap_mspca.py``),
+and the map phase stays embarrassingly parallel given the halos. With
+``cfg.overlap == 0`` the features are byte-identical to the historical
+independent-chunk path.
 """
 
 from __future__ import annotations
@@ -46,9 +51,13 @@ from repro.signal import eeg_data, features, mspca
 class FrontendState(NamedTuple):
     """Carried per-stream signal context (one stream; vmap for batches).
 
-    boundary : (C, N) float32 -- the last raw window of the previous
-               chunk (zeros before the first chunk). Cross-chunk denoise
-               context for the streaming path; carried, not yet consumed.
+    boundary : (H, C, N) float32 -- the last ``H = max(1, overlap)`` raw
+               windows of the previous chunk (zeros before the first
+               chunk). With ``cfg.overlap > 0`` these are the denoise
+               halo the next chunk consumes; with ``overlap == 0`` the
+               single boundary window is carried but not consumed (the
+               pre-overlap contract, kept so state layout migrations
+               stay explicit).
     phase    : () int32 -- chunks processed so far (the running chunk
                phase; the engine's per-slot copy survives slot eviction).
     """
@@ -57,12 +66,21 @@ class FrontendState(NamedTuple):
     phase: jax.Array
 
 
+def boundary_width(overlap: int) -> int:
+    """Carried boundary windows for an overlap setting (always >= 1)."""
+    return max(1, overlap)
+
+
 def init_state(
-    n_channels: int = eeg_data.N_CHANNELS, window: int = eeg_data.WINDOW
+    n_channels: int = eeg_data.N_CHANNELS,
+    window: int = eeg_data.WINDOW,
+    overlap: int = 0,
 ) -> FrontendState:
     """Zero context: a stream that has not produced a chunk yet."""
     return FrontendState(
-        boundary=jnp.zeros((n_channels, window), jnp.float32),
+        boundary=jnp.zeros(
+            (boundary_width(overlap), n_channels, window), jnp.float32
+        ),
         phase=jnp.zeros((), jnp.int32),
     )
 
@@ -71,15 +89,20 @@ def init_batch(
     batch: int,
     n_channels: int = eeg_data.N_CHANNELS,
     window: int = eeg_data.WINDOW,
+    overlap: int = 0,
 ) -> FrontendState:
     """(B,)-leading zero states: one per engine slot."""
     return FrontendState(
-        boundary=jnp.zeros((batch, n_channels, window), jnp.float32),
+        boundary=jnp.zeros(
+            (batch, boundary_width(overlap), n_channels, window), jnp.float32
+        ),
         phase=jnp.zeros((batch,), jnp.int32),
     )
 
 
-def chunk_features(chunk_windows: jax.Array, cfg) -> jax.Array:
+def chunk_features(
+    chunk_windows: jax.Array, cfg, halo: jax.Array | None = None
+) -> jax.Array:
     """(W, C, N) chunk -> (W, F) feature rows: the stateless core of one
     frontend step (denoise the chunk's 8-minute matrices, WPD-featurize
     each window). Both scoring paths -- the scanned stream and the
@@ -94,21 +117,58 @@ def chunk_features(chunk_windows: jax.Array, cfg) -> jax.Array:
     2048 x 180 matrix shape the training statistics were computed from
     (train/serve consistency) and scores bit-identically to the
     pre-scan engine.
+
+    With ``cfg.overlap > 0``, ``halo`` is the (overlap, C, N) raw
+    windows that precede this chunk in the stream (``None`` means a
+    stream start: a zero halo, exactly what a fresh session's first
+    chunk sees). The halo is prepended to the FIRST denoise matrix as
+    extra columns; when the (wrap-padded) chunk spans several matrices,
+    each inner matrix takes the raw tail of its predecessor in padded
+    order -- the halo is always raw windows, so every matrix's halo is
+    known upfront and the denoises stay vmappable. The wrap-pad is
+    applied first: the halo touches only the matrix HEAD, never the
+    cyclic padding at the tail (pinned by
+    ``tests/test_overlap_mspca.py``).
     """
     if cfg.denoise:
         w, c, n = chunk_windows.shape
         per = eeg_data.WINDOWS_PER_MATRIX
+        h = cfg.overlap
+        if h > per:
+            raise ValueError(
+                f"overlap={h} exceeds WINDOWS_PER_MATRIX={per}: the halo "
+                "must come from the immediately preceding denoise matrix"
+            )
         n_mat = max(1, -(-w // per))
         pad = n_mat * per - w
         padded = (
             jnp.resize(chunk_windows, (n_mat * per, c, n)) if pad
             else chunk_windows
         )
-        den = jax.vmap(
-            lambda m: mspca.denoise_windows(
-                m, level=cfg.mspca_level, wavelet_name=cfg.wavelet
+        mats = padded.reshape(n_mat, per, c, n)
+        if h:
+            if halo is None:
+                halo = jnp.zeros((h, c, n), jnp.float32)
+            if halo.shape != (h, c, n):
+                raise ValueError(
+                    f"halo shape {halo.shape} != ({h}, {c}, {n}) "
+                    f"for overlap={h}"
+                )
+            halos = jnp.concatenate(
+                [halo[None].astype(jnp.float32), mats[:-1, per - h:]]
             )
-        )(padded.reshape(n_mat, per, c, n))
+            den = jax.vmap(
+                lambda m, hl: mspca.denoise_windows(
+                    m, level=cfg.mspca_level, wavelet_name=cfg.wavelet,
+                    halo=hl,
+                )
+            )(mats, halos)
+        else:
+            den = jax.vmap(
+                lambda m: mspca.denoise_windows(
+                    m, level=cfg.mspca_level, wavelet_name=cfg.wavelet
+                )
+            )(mats)
         chunk_windows = den.reshape(n_mat * per, c, n)[:w]
     return features.wpd_features(
         chunk_windows, level=cfg.wpd_level, wavelet_name=cfg.wavelet,
@@ -121,14 +181,25 @@ def frontend_step(
 ) -> tuple[FrontendState, jax.Array]:
     """The pure streaming transition: consume one (W, C, N) chunk.
 
-    Returns the advanced state (boundary window, phase + 1) and the
-    chunk's (W, F) feature rows. Per-chunk denoise is independent
-    (paper Sec. 2.6), so scanning this over a chunk-aligned stream is
-    bit-identical to the one-shot batch featurization.
+    Returns the advanced state (boundary windows, phase + 1) and the
+    chunk's (W, F) feature rows. With ``cfg.overlap == 0`` each chunk's
+    denoise is independent (paper Sec. 2.6); with ``overlap > 0`` the
+    carried boundary is consumed as the denoise halo. Either way the
+    step depends on its predecessor only through ``state``, so scanning
+    it over a chunk-aligned stream is bit-identical to the one-shot
+    batch featurization.
     """
-    feats = chunk_features(chunk_windows, cfg)
+    feats = chunk_features(
+        chunk_windows, cfg, halo=state.boundary if cfg.overlap else None
+    )
+    bw = state.boundary.shape[0]
     new_state = FrontendState(
-        boundary=chunk_windows[-1].astype(jnp.float32),
+        # Last bw RAW windows of the stream so far: the chunk tail when
+        # the chunk is at least bw windows deep, topped up from the old
+        # boundary otherwise (tiny nonstandard chunk_windows).
+        boundary=jnp.concatenate(
+            [state.boundary, chunk_windows.astype(jnp.float32)]
+        )[-bw:],
         phase=state.phase + 1,
     )
     return new_state, feats
@@ -164,7 +235,7 @@ class StreamingFrontend:
     def __init__(self, cfg, chunk_windows: int = eeg_data.WINDOWS_PER_MATRIX):
         self.cfg = cfg
         self.chunk_windows = chunk_windows
-        self.state = init_state()
+        self.state = init_state(overlap=cfg.overlap)
         self._buf = np.zeros(
             (0, eeg_data.N_CHANNELS, eeg_data.WINDOW), np.float32
         )

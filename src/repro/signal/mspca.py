@@ -94,7 +94,10 @@ def denoise(
 
 @functools.partial(jax.jit, static_argnames=("level", "wavelet_name"))
 def denoise_windows(
-    windows: jax.Array, level: int = 5, wavelet_name: str = "db4"
+    windows: jax.Array,
+    level: int = 5,
+    wavelet_name: str = "db4",
+    halo: jax.Array | None = None,
 ) -> jax.Array:
     """(W, C, N) raw windows -> (W, C, N) denoised: one 8-minute matrix.
 
@@ -106,16 +109,96 @@ def denoise_windows(
     streaming transition and (through it) the batch
     ``pipeline.process_windows`` -- so the matrix layout cannot drift
     between them.
+
+    ``halo``: optional (H, C, N) raw windows that immediately PRECEDE
+    this chunk in the stream (the carried ``FrontendState.boundary``).
+    They are prepended as extra columns -- the matrix becomes
+    N x ((H+W)*C) -- so the per-scale PCA bases are estimated with
+    cross-seam context, then the halo columns are discarded: only the
+    chunk's own W windows come back. ``halo=None`` (or H == 0) is
+    byte-for-byte the historical independent-chunk path.
     """
     w, c, n = windows.shape
-    mat = windows.transpose(2, 0, 1).reshape(n, w * c)
+    if halo is not None and halo.shape[0] == 0:
+        halo = None
+    if halo is None:
+        mat = windows.transpose(2, 0, 1).reshape(n, w * c)
+        den = denoise(mat, level=level, wavelet_name=wavelet_name)
+        return den.reshape(n, w, c).transpose(1, 2, 0)
+    h = halo.shape[0]
+    ext = jnp.concatenate([halo.astype(windows.dtype), windows])
+    mat = ext.transpose(2, 0, 1).reshape(n, (h + w) * c)
     den = denoise(mat, level=level, wavelet_name=wavelet_name)
-    return den.reshape(n, w, c).transpose(1, 2, 0)
+    return den.reshape(n, h + w, c).transpose(1, 2, 0)[h:]
+
+
+def denoise_stream_chunked(
+    stream: jax.Array,
+    overlap: int,
+    per: int = 60,
+    level: int = 5,
+    wavelet_name: str = "db4",
+) -> jax.Array:
+    """Reference chunked denoise of a chunk-aligned (K*per, C, N) stream:
+    one ``denoise_windows`` call per chunk, carrying the previous chunk's
+    last ``overlap`` RAW windows as the next chunk's halo (zeros before
+    the first chunk). This is the longhand formulation of what
+    ``frontend.frontend_step`` computes per step -- the seam-oracle
+    harness of ``tests/test_overlap_mspca.py`` and the CI-gated
+    ``bench_mspca_denoise`` seam ablation both measure THIS function, so
+    the gate and the test oracle cannot drift apart."""
+    k, rem = divmod(stream.shape[0], per)
+    if rem:
+        raise ValueError(
+            f"stream of {stream.shape[0]} windows is not {per}-aligned"
+        )
+    chunks = stream.reshape(k, per, *stream.shape[1:])
+    outs, halo = [], None
+    for i in range(k):
+        c = chunks[i]
+        if overlap:
+            hl = (jnp.zeros((overlap, *stream.shape[1:]), jnp.float32)
+                  if halo is None else halo)
+            outs.append(denoise_windows(
+                c, level=level, wavelet_name=wavelet_name, halo=hl
+            ))
+            halo = c[per - overlap :].astype(jnp.float32)
+        else:
+            outs.append(denoise_windows(
+                c, level=level, wavelet_name=wavelet_name
+            ))
+    return jnp.concatenate(outs)
+
+
+def worst_seam_snr_db(
+    reference: jax.Array,
+    denoised: jax.Array,
+    per: int = 60,
+    seam_windows: int = 8,
+) -> float:
+    """Worst per-seam ``snr_db`` of chunked ``denoised`` output against
+    the full-recording ``reference`` (the stream denoised as ONE
+    matrix). Each seam is scored over its head region -- the
+    ``seam_windows`` windows AFTER a chunk boundary, the windows whose
+    preceding context the chunking cut. Higher is better; the
+    stream-start chunk has no seam and is excluded."""
+    n_chunks = reference.shape[0] // per
+    return min(
+        float(snr_db(
+            reference[k * per : k * per + seam_windows],
+            denoised[k * per : k * per + seam_windows],
+        ))
+        for k in range(1, n_chunks)
+    )
 
 
 def snr_db(clean: jax.Array, noisy: jax.Array) -> jax.Array:
-    """Diagnostic: SNR of ``noisy`` against ``clean`` in dB."""
+    """SNR of ``noisy`` against ``clean`` in dB (the seam-error metric of
+    ``tests/test_overlap_mspca.py`` / ``benchmarks/bench_mspca_denoise``).
+    Both powers are floored so a zero-power ``clean`` input yields a
+    finite 0 dB instead of ``log10(0) = -inf``."""
     err = noisy - clean
     return 10.0 * jnp.log10(
-        jnp.sum(clean**2) / jnp.maximum(jnp.sum(err**2), 1e-12)
+        jnp.maximum(jnp.sum(clean**2), 1e-12)
+        / jnp.maximum(jnp.sum(err**2), 1e-12)
     )

@@ -37,6 +37,12 @@ class PipelineConfig(NamedTuple):
     # 8-minute chunks are classified preictal.
     alarm_k: int = 3
     alarm_m: int = 5
+    # Cross-chunk denoise halo: prepend this many raw windows from the
+    # previous chunk to each MSPCA matrix (columns discarded after the
+    # denoise) so the per-scale PCA bases see cross-seam context.
+    # 0 (default) = the paper's fully independent chunks, bit-identical
+    # to the pre-overlap scoring path.
+    overlap: int = 0
 
 
 class FittedPipeline(NamedTuple):
@@ -79,7 +85,9 @@ def process_windows(windows: jax.Array, cfg: PipelineConfig) -> jax.Array:
     # one chunk (pad > w, where the concatenate form under-fills).
     padded = jnp.resize(windows, (n_mat * per, c, n)) if pad else windows
     chunks = padded.reshape(n_mat, per, c, n)
-    _, feats = frontend.scan_stream(frontend.init_state(c, n), chunks, cfg)
+    _, feats = frontend.scan_stream(
+        frontend.init_state(c, n, cfg.overlap), chunks, cfg
+    )
     return feats.reshape(n_mat * per, -1)[:w]
 
 
@@ -247,8 +255,8 @@ def evaluate_timeline(
     chunks per jitted dispatch -- the bulk-replay path; per-chunk events
     are byte-identical to depth-1 scoring). Trailing windows that do not
     fill a chunk are scored for ``window_preds`` only (self-wrapped
-    denoise context, matching what a live session would see), exactly as
-    ``chunk_predictions`` drops them.
+    denoise context with a stream-start halo, exactly as
+    ``chunk_predictions`` drops them from the chunk votes).
     """
     from repro.serving import api  # deferred: serving.api imports us
 

@@ -1,54 +1,73 @@
-"""Hypothesis property test: ``SeizureEngine`` alarm events are
-bit-identical to the ``signal.pipeline`` ``chunk_predictions`` +
-``alarm_state`` oracle under RANDOM multi-patient interleavings,
-out-of-order session creation, and partial (non-chunk-aligned) pushes.
+"""Hypothesis property tests: ``SeizureEngine`` alarm events are
+bit-identical to the ``signal.pipeline`` oracle under RANDOM
+multi-patient interleavings, out-of-order session creation, partial
+(non-chunk-aligned) pushes, backlog replay (``replay_depth > 1``), and
+-- with ``cfg.overlap > 0`` -- slot eviction/admission moving the
+widened ``fe_boundary`` halo payload between host and device.
 
 The checker (and its seeded deterministic variants) lives in
-``test_seizure_engine.py``; this module drives it with drawn inputs."""
+``test_seizure_engine.py``; this module drives it with drawn inputs.
+Settings come from the profile registered in ``tests/conftest.py``
+("ci" on the PR gate, "deep" on the scheduled fuzzing job) -- no
+per-test @settings here, they would override the profile."""
 
 from __future__ import annotations
 
 import pytest
 
 pytest.importorskip("hypothesis")  # property tests need hypothesis; CI installs it
-from hypothesis import HealthCheck, given, settings, strategies as st
+from hypothesis import given, strategies as st
 
-from test_seizure_engine import (  # noqa: F401  (imported fixtures)
-    chunk_pool,
-    fitted,
-    program,
-    run_interleaving,
-    small_cfg,
-    timeline,
-)
+from test_seizure_engine import run_interleaving
 
 
-@settings(
-    max_examples=6,
-    deadline=None,
-    derandomize=True,  # CI stability: same examples every run
-    suppress_health_check=list(HealthCheck),
-)
-@given(data=st.data())
-def test_engine_events_match_alarm_oracle(program, fitted, chunk_pool, data):
+def _draw_streams(data, max_chunks=3):
     n_patients = data.draw(st.integers(1, 3), label="n_patients")
     streams = {}
     for pid in range(n_patients):
         chunk_idxs = data.draw(
-            st.lists(st.integers(0, 1), min_size=1, max_size=3),
+            st.lists(st.integers(0, 1), min_size=1, max_size=max_chunks),
             label=f"patient{pid}_chunks",
         )
         extra = data.draw(
             st.sampled_from([0, 30]), label=f"patient{pid}_tail_windows"
         )
         streams[pid] = (chunk_idxs, extra)
-    max_batch = data.draw(st.integers(1, 2), label="max_batch")
     open_order = data.draw(
         st.permutations(sorted(streams)), label="session_open_order"
     )
     seed = data.draw(st.integers(0, 2**16 - 1), label="interleave_seed")
+    return streams, list(open_order), seed
+
+
+@given(data=st.data())
+def test_engine_events_match_alarm_oracle(program, fitted, chunk_pool, data):
+    streams, open_order, seed = _draw_streams(data)
+    max_batch = data.draw(st.integers(1, 2), label="max_batch")
     run_interleaving(
         program, fitted, chunk_pool,
         max_batch=max_batch, streams=streams,
-        open_order=list(open_order), seed=seed,
+        open_order=open_order, seed=seed,
+    )
+
+
+@given(data=st.data())
+def test_overlap_engine_replay_eviction_matches_oracle(
+    overlap_program, fitted, chunk_pool, data
+):
+    """The overlap-aware twin, with the two state-machine stressors ON at
+    once: ``replay_depth > 1`` (the in-step backlog scan advances the
+    halo INSIDE ``lax.scan``) interleaved with session eviction/admission
+    (up to 3 sessions over 1-2 slots, so the widened ``fe_boundary``
+    payload keeps round-tripping host <-> device mid-stream). Every vote
+    and alarm must still match the sequential pipeline oracle
+    bit-for-bit -- a splice that loses or reorders halo windows shows up
+    as a diverging window prediction at the next seam."""
+    streams, open_order, seed = _draw_streams(data, max_chunks=4)
+    max_batch = data.draw(st.integers(1, 2), label="max_batch")
+    replay_depth = data.draw(st.integers(2, 4), label="replay_depth")
+    run_interleaving(
+        overlap_program, fitted, chunk_pool,
+        max_batch=max_batch, streams=streams,
+        open_order=open_order, seed=seed, replay_depth=replay_depth,
     )

@@ -18,7 +18,6 @@ on-device frontend-context splice are covered here too.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -26,28 +25,11 @@ import pytest
 from repro.signal import eeg_data, frontend, pipeline
 from repro.serving import api
 
-from test_seizure_engine import (  # noqa: F401  (imported fixtures)
-    chunk_pool,
-    fitted,
-    program,
-    small_cfg,
-    timeline,
-)
+# Fixtures (seam_stream, signal_cfg, program, chunk_pool, fitted, ...)
+# come from tests/conftest.py -- the shared seam-oracle stream doubles
+# as this module's 3-chunk test stream.
 
 PER = eeg_data.WINDOWS_PER_MATRIX
-
-
-@pytest.fixture(scope="module")
-def stream3():
-    """A 3-chunk raw stream (the frontend needs no fitted forest)."""
-    return np.asarray(eeg_data.generate_windows(
-        jax.random.PRNGKey(5), jnp.asarray(3), eeg_data.INTERICTAL, 3 * PER
-    ))
-
-
-@pytest.fixture(scope="module")
-def signal_cfg():
-    return pipeline.PipelineConfig()
 
 
 # ---------------------------------------------------------------------------
@@ -75,53 +57,53 @@ def check_split_matches_oneshot(stream, cfg, split_sizes):
 
 class TestScanMatchesOneShot:
     @pytest.mark.parametrize("seed", [0, 1, 2])
-    def test_random_splits(self, stream3, signal_cfg, seed):
+    def test_random_splits(self, seam_stream, signal_cfg, seed):
         rng = np.random.RandomState(seed)
-        sizes, left = [], stream3.shape[0]
+        sizes, left = [], seam_stream.shape[0]
         while left:
             n = int(rng.randint(1, 100))
             sizes.append(min(n, left))
             left -= sizes[-1]
-        check_split_matches_oneshot(stream3, signal_cfg, sizes)
+        check_split_matches_oneshot(seam_stream, signal_cfg, sizes)
 
-    def test_whole_chunk_splits(self, stream3, signal_cfg):
-        check_split_matches_oneshot(stream3, signal_cfg, [PER] * 3)
+    def test_whole_chunk_splits(self, seam_stream, signal_cfg):
+        check_split_matches_oneshot(seam_stream, signal_cfg, [PER] * 3)
 
-    def test_single_push_with_tail(self, stream3, signal_cfg):
-        check_split_matches_oneshot(stream3[: 2 * PER + 17], signal_cfg,
+    def test_single_push_with_tail(self, seam_stream, signal_cfg):
+        check_split_matches_oneshot(seam_stream[: 2 * PER + 17], signal_cfg,
                                     [2 * PER + 17])
 
-    def test_scan_stream_equals_process_windows(self, stream3, signal_cfg):
+    def test_scan_stream_equals_process_windows(self, seam_stream, signal_cfg):
         # The jitted scan itself (no host buffering) against the batch
         # path -- this is literally what process_windows now runs, so it
         # doubles as a regression pin for the state-threading.
-        chunks = jnp.asarray(stream3).reshape(3, PER, *stream3.shape[1:])
+        chunks = jnp.asarray(seam_stream).reshape(3, PER, *seam_stream.shape[1:])
         state = frontend.init_state()
         state, feats = frontend.scan_stream(state, chunks, signal_cfg)
         np.testing.assert_array_equal(
             np.asarray(feats).reshape(3 * PER, -1),
             np.asarray(pipeline.process_windows(
-                jnp.asarray(stream3), signal_cfg
+                jnp.asarray(seam_stream), signal_cfg
             )),
         )
         assert int(state.phase) == 3
-        np.testing.assert_array_equal(
-            np.asarray(state.boundary), stream3[-1]
+        np.testing.assert_array_equal(  # (1, C, N): one carried window
+            np.asarray(state.boundary), seam_stream[-1:]
         )
 
-    def test_frontend_step_advances_state(self, stream3, signal_cfg):
+    def test_frontend_step_advances_state(self, seam_stream, signal_cfg):
         state = frontend.init_state()
-        chunk = jnp.asarray(stream3[:PER])
+        chunk = jnp.asarray(seam_stream[:PER])
         state, feats = frontend.frontend_step(state, chunk, signal_cfg)
         assert int(state.phase) == 1
         np.testing.assert_array_equal(
-            np.asarray(state.boundary), stream3[PER - 1]
+            np.asarray(state.boundary), seam_stream[PER - 1 : PER]
         )
         assert feats.shape[0] == PER
 
-    def test_denoise_off_path(self, stream3):
+    def test_denoise_off_path(self, seam_stream):
         cfg = pipeline.PipelineConfig(denoise=False)
-        check_split_matches_oneshot(stream3[: PER + 30], cfg, [PER + 30])
+        check_split_matches_oneshot(seam_stream[: PER + 30], cfg, [PER + 30])
 
 
 # ---------------------------------------------------------------------------
@@ -211,7 +193,7 @@ class TestBacklogReplay:
             if session.slot is not None:
                 engine._evict(session.slot)
             assert session.fe_phase == 3
-            np.testing.assert_array_equal(session.fe_boundary, last[-1])
+            np.testing.assert_array_equal(session.fe_boundary, last[-1:])
 
     def test_nonstandard_chunk_windows_matches_pipeline_oracle(
         self, program, fitted, chunk_pool
@@ -324,7 +306,7 @@ class TestLatencyBudget:
 # ---------------------------------------------------------------------------
 
 try:
-    from hypothesis import HealthCheck, given, settings, strategies as st
+    from hypothesis import given, strategies as st
 
     HAVE_HYPOTHESIS = True
 except ImportError:  # CI installs hypothesis; local runs may lack it
@@ -332,31 +314,23 @@ except ImportError:  # CI installs hypothesis; local runs may lack it
 
 
 if HAVE_HYPOTHESIS:
+    # Settings come from the profile registered in conftest.py ("ci":
+    # few, derandomized examples on the PR gate; "deep": the scheduled
+    # fuzzing job). Do not add per-test @settings -- it would override
+    # the profile.
 
-    @settings(
-        max_examples=5,
-        deadline=None,
-        derandomize=True,
-        suppress_health_check=list(HealthCheck),
-    )
     @given(data=st.data())
     def test_any_chunk_aligned_split_matches_oneshot(
-        stream3, signal_cfg, data
+        seam_stream, signal_cfg, data
     ):
-        total = stream3.shape[0]
+        total = seam_stream.shape[0]
         sizes, left = [], total
         while left > 0:
             n = data.draw(st.integers(1, min(120, left)), label="split")
             sizes.append(n)
             left -= n
-        check_split_matches_oneshot(stream3, signal_cfg, sizes)
+        check_split_matches_oneshot(seam_stream, signal_cfg, sizes)
 
-    @settings(
-        max_examples=5,
-        deadline=None,
-        derandomize=True,
-        suppress_health_check=list(HealthCheck),
-    )
     @given(data=st.data())
     def test_any_backlog_replay_depth_equivalent(program, chunk_pool, data):
         idxs = data.draw(

@@ -1,0 +1,452 @@
+"""Seam-oracle verification subsystem for overlap-aware MSPCA.
+
+The paper denoises each 8-minute chunk as an independent 2048 x 180
+matrix, so chunked scoring sees a hard statistical edge at every chunk
+seam. ``cfg.overlap = h`` prepends the previous chunk's last ``h`` raw
+windows to each denoise matrix as halo columns (discarded after), giving
+the per-scale PCA bases cross-seam context. Because that is a NUMERICS
+change, this module is the oracle that gates it:
+
+  reference : the full recording denoised as ONE matrix (the
+              ``seam_reference`` fixture) -- no seams at all.
+  seam error: ``mspca.snr_db`` of the chunked output against that
+              reference over each seam's head region (the first
+              ``SEAM_WINDOWS`` windows after a chunk boundary -- the
+              windows whose preceding context the chunking cut); the
+              WORST seam is the pinned number.
+
+Contracts:
+  (a) ``overlap=0`` is BIT-identical to the pre-overlap path everywhere
+      (batch, stateless engine scoring, split streaming; the engine
+      event suites in test_seizure_engine/test_frontend run at
+      overlap=0 and pin the rest).
+  (b) overlap reduces the worst-seam reconstruction error, strictly for
+      overlap >= 1 on the pinned stream and across drawn synthetic
+      streams at larger halos (hypothesis).
+  (c) any chunk-aligned split of a stream -- incremental frontend,
+      engine sessions across replay depths and slot eviction -- equals
+      the one-shot overlap-aware oracle bit-exactly.
+
+Settings for the hypothesis twins come from the conftest profile
+("ci" / "deep"); no per-test @settings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rotation_forest as rf
+from repro.serving import api
+from repro.signal import eeg_data, features, frontend, mspca, pipeline
+
+from test_frontend import (
+    check_replay_depth_equivalence,
+    check_split_matches_oneshot,
+)
+
+PER = eeg_data.WINDOWS_PER_MATRIX
+SEAM_WINDOWS = 8  # seam head region scored per chunk boundary
+
+
+# ---------------------------------------------------------------------------
+# Harness: the shared seam-oracle measurement (mspca owns it so this
+# module and the CI-gated bench_mspca_denoise ablation measure ONE
+# implementation -- the gate and the test oracle cannot drift apart)
+# ---------------------------------------------------------------------------
+
+def chunked_denoise(stream: np.ndarray, overlap: int) -> np.ndarray:
+    """Chunk-by-chunk denoise with carried raw halos: the reference
+    formulation of what ``frontend.frontend_step`` computes per step."""
+    return np.asarray(mspca.denoise_stream_chunked(
+        jnp.asarray(stream), overlap, per=PER
+    ))
+
+
+def worst_seam_snr_db(reference, denoised) -> float:
+    return mspca.worst_seam_snr_db(
+        jnp.asarray(reference), jnp.asarray(denoised),
+        per=PER, seam_windows=SEAM_WINDOWS,
+    )
+
+
+def manual_pre_overlap_features(stream: np.ndarray, cfg) -> np.ndarray:
+    """The PRE-PR scoring formulation, written out longhand: every chunk
+    denoised independently (no halo argument at all), then WPD. The
+    overlap=0 path must reproduce this bit-for-bit."""
+    chunks = stream.reshape(-1, PER, *stream.shape[1:])
+    den = np.concatenate([
+        np.asarray(mspca.denoise_windows(
+            jnp.asarray(c), level=cfg.mspca_level, wavelet_name=cfg.wavelet
+        ))
+        for c in chunks
+    ])
+    return np.asarray(features.wpd_features(
+        jnp.asarray(den), level=cfg.wpd_level, wavelet_name=cfg.wavelet
+    ))
+
+
+# ---------------------------------------------------------------------------
+# denoise_windows halo semantics
+# ---------------------------------------------------------------------------
+
+class TestHaloDenoise:
+    def test_empty_halo_is_the_no_halo_path(self, seam_stream):
+        chunk = jnp.asarray(seam_stream[:PER])
+        plain = np.asarray(mspca.denoise_windows(chunk))
+        empty = np.asarray(mspca.denoise_windows(
+            chunk, halo=jnp.zeros((0, *seam_stream.shape[1:]))
+        ))
+        np.testing.assert_array_equal(plain, empty)
+
+    def test_zero_halo_matches_no_halo_numerically(self, seam_stream):
+        # Zero halo columns center to zero, contribute nothing to the
+        # per-scale covariances, and sort behind every kept component --
+        # the reconstruction matches the halo-free path up to eigh's
+        # size-dependent roundoff (NOT bit-exact: the matrix is wider).
+        chunk = jnp.asarray(seam_stream[:PER])
+        plain = np.asarray(mspca.denoise_windows(chunk))
+        zero = np.asarray(mspca.denoise_windows(
+            chunk, halo=jnp.zeros((2, *seam_stream.shape[1:]))
+        ))
+        assert np.abs(zero - plain).max() <= 1e-3 * np.abs(plain).max()
+
+    def test_halo_columns_are_prepended_then_discarded(self, seam_stream):
+        # denoise_windows(chunk, halo) == the (halo+chunk) matrix
+        # denoised as one unit with the halo windows sliced off: the
+        # halo shapes the PCA bases but never reaches the output.
+        h = 3
+        halo = jnp.asarray(seam_stream[PER - h : PER])
+        chunk = jnp.asarray(seam_stream[PER : 2 * PER])
+        got = np.asarray(mspca.denoise_windows(chunk, halo=halo))
+        joint = np.asarray(mspca.denoise_windows(
+            jnp.asarray(seam_stream[PER - h : 2 * PER])
+        ))
+        np.testing.assert_array_equal(got, joint[h:])
+        assert got.shape == chunk.shape
+
+    def test_snr_db_guards_zero_power_clean(self):
+        zero = jnp.zeros((4, 8))
+        assert np.isfinite(float(mspca.snr_db(zero, zero)))
+        assert np.isfinite(float(mspca.snr_db(zero, jnp.ones((4, 8)))))
+        # and the ordinary direction still behaves like an SNR
+        clean = jnp.ones((4, 8))
+        assert float(mspca.snr_db(clean, clean * 1.01)) > float(
+            mspca.snr_db(clean, clean * 1.5)
+        )
+
+
+# ---------------------------------------------------------------------------
+# (a) overlap=0 is bit-identical to the pre-overlap path
+# ---------------------------------------------------------------------------
+
+class TestOverlapZeroBitIdentity:
+    def test_batch_path_matches_manual_pre_overlap(
+        self, seam_stream, signal_cfg
+    ):
+        assert signal_cfg.overlap == 0
+        got = np.asarray(pipeline.process_windows(
+            jnp.asarray(seam_stream), signal_cfg
+        ))
+        np.testing.assert_array_equal(
+            got, manual_pre_overlap_features(seam_stream, signal_cfg)
+        )
+
+    def test_chunk_features_matches_manual_pre_overlap(
+        self, seam_stream, signal_cfg
+    ):
+        got = np.asarray(frontend.chunk_features(
+            jnp.asarray(seam_stream[:PER]), signal_cfg
+        ))
+        np.testing.assert_array_equal(
+            got, manual_pre_overlap_features(seam_stream[:PER], signal_cfg)
+        )
+
+    def test_stateless_score_equals_first_chunk_of_session(
+        self, overlap_program, chunk_pool
+    ):
+        # The stateless engine path has no carried boundary: under
+        # overlap>0 it scores with a stream-start (zero) halo, exactly
+        # like the first chunk of a fresh session.
+        quiet, pre = chunk_pool
+        engine = api.SeizureEngine(overlap_program, max_batch=2)
+        votes, frac, preds = engine.score_chunks(np.stack([quiet, pre]))
+        for i, chunk in enumerate((quiet, pre)):
+            session_engine = api.SeizureEngine(overlap_program, max_batch=1)
+            session_engine.open_session(i).push(chunk)
+            [e] = [x for x in session_engine.poll()
+                   if isinstance(x, api.ChunkScored)]
+            assert e.chunk_pred == int(votes[i])
+            np.testing.assert_array_equal(e.window_preds, np.asarray(preds[i]))
+
+
+# ---------------------------------------------------------------------------
+# (b) overlap reduces the worst-seam error vs the full-recording oracle
+# ---------------------------------------------------------------------------
+
+class TestSeamOracle:
+    def test_chunked_is_worse_than_full_recording_reference(
+        self, seam_stream, seam_reference
+    ):
+        # Sanity on the harness itself: chunked denoise really does
+        # diverge from the no-seam oracle (else "reducing seam error"
+        # would be vacuous). ~17 dB on the pinned stream.
+        worst = worst_seam_snr_db(seam_reference, chunked_denoise(seam_stream, 0))
+        assert np.isfinite(worst) and worst < 40.0
+
+    def test_overlap_strictly_reduces_worst_seam_error(
+        self, seam_stream, seam_reference
+    ):
+        # The acceptance chain on the pinned stream (measured:
+        # 16.98 < 17.04 < 17.14 < 17.27 dB for h = 0, 1, 2, 4): every
+        # step strict, so overlap>=1 strictly beats the independent
+        # chunks and deeper halos keep helping.
+        snr = {
+            h: worst_seam_snr_db(seam_reference, chunked_denoise(seam_stream, h))
+            for h in (0, 1, 2, 4)
+        }
+        assert snr[1] > snr[0]
+        assert snr[2] > snr[1]
+        assert snr[4] > snr[2]
+
+    def test_scan_features_match_chunked_denoise_harness(
+        self, seam_stream, signal_cfg
+    ):
+        # The product path (frontend_step scanned with the carried
+        # boundary) must equal WPD over this module's reference halo
+        # harness bit-for-bit -- pins that chunk_features consumes the
+        # halo exactly as specified, per overlap depth.
+        for h in (1, 2):
+            cfg = signal_cfg._replace(overlap=h)
+            want = np.asarray(features.wpd_features(
+                jnp.asarray(chunked_denoise(seam_stream, h)),
+                level=cfg.wpd_level, wavelet_name=cfg.wavelet,
+            ))
+            got = np.asarray(pipeline.process_windows(
+                jnp.asarray(seam_stream), cfg
+            ))
+            np.testing.assert_array_equal(got, want)
+
+    def test_overlap_beyond_matrix_raises(self, seam_stream, signal_cfg):
+        cfg = signal_cfg._replace(overlap=PER + 1)
+        with pytest.raises(ValueError, match="overlap"):
+            frontend.chunk_features(jnp.asarray(seam_stream[:PER]), cfg)
+
+    def test_mismatched_halo_shape_raises(self, seam_stream, signal_cfg):
+        cfg = signal_cfg._replace(overlap=2)
+        with pytest.raises(ValueError, match="halo shape"):
+            frontend.chunk_features(
+                jnp.asarray(seam_stream[:PER]), cfg,
+                halo=jnp.zeros((3, *seam_stream.shape[1:])),
+            )
+
+
+# ---------------------------------------------------------------------------
+# (c) chunk-aligned splits == the one-shot overlap-aware oracle
+# ---------------------------------------------------------------------------
+
+class TestStreamEquivalence:
+    @pytest.mark.parametrize("overlap", [1, 2])
+    def test_split_stream_matches_oneshot(
+        self, seam_stream, signal_cfg, overlap
+    ):
+        cfg = signal_cfg._replace(overlap=overlap)
+        check_split_matches_oneshot(seam_stream, cfg, [PER, 2 * PER])
+        check_split_matches_oneshot(seam_stream, cfg, [17, PER, seam_stream.shape[0] - PER - 17])
+
+    def test_engine_replay_depths_equivalent_under_overlap(
+        self, overlap_program, chunk_pool
+    ):
+        check_replay_depth_equivalence(
+            overlap_program, chunk_pool, [1, 0, 1, 1, 0], depth=3
+        )
+
+    def test_eviction_churn_matches_sequential_oracle(
+        self, overlap_program, fitted, chunk_pool
+    ):
+        # One slot, two sessions: every chunk round-trips the widened
+        # halo payload through _evict/_admit. Per-session window preds
+        # must equal the uninterrupted sequential pipeline run.
+        quiet, pre = chunk_pool
+        streams = {0: [pre, quiet, pre], 1: [quiet, quiet]}
+        engine = api.SeizureEngine(overlap_program, max_batch=1)
+        sessions = {pid: engine.open_session(pid) for pid in streams}
+        got = {pid: [] for pid in streams}
+        for step in range(3):
+            for pid, chunks in streams.items():
+                if step < len(chunks):
+                    sessions[pid].push(chunks[step])
+            for e in engine.poll():
+                if isinstance(e, api.ChunkScored):
+                    got[e.patient_id].append(e.window_preds)
+        for pid, chunks in streams.items():
+            want = pipeline.predict_windows(
+                fitted, jnp.asarray(np.concatenate(chunks)),
+                overlap_program.cfg,
+            )
+            np.testing.assert_array_equal(
+                np.concatenate(got[pid]), np.asarray(want, np.int32)
+            )
+
+
+# ---------------------------------------------------------------------------
+# Wrap-padding x halo: nonstandard chunk_windows engines
+# ---------------------------------------------------------------------------
+
+class TestWrapPadHaloInteraction:
+    def test_single_matrix_wrap_pad_keeps_halo_at_head(
+        self, seam_stream, signal_cfg
+    ):
+        # chunk_windows=30 with overlap=2: the chunk wrap-pads (cyclic
+        # tiling) to one PER-window matrix and the halo lands at the
+        # matrix HEAD -- the tail padding must stay pure wrap content.
+        cfg = signal_cfg._replace(overlap=2)
+        chunk = seam_stream[PER : PER + 30]
+        halo = jnp.asarray(seam_stream[PER - 2 : PER])
+        got = np.asarray(frontend.chunk_features(
+            jnp.asarray(chunk), cfg, halo=halo
+        ))
+        padded = np.asarray(jnp.resize(jnp.asarray(chunk), (PER, *chunk.shape[1:])))
+        den = np.asarray(mspca.denoise_windows(
+            jnp.asarray(padded), level=cfg.mspca_level,
+            wavelet_name=cfg.wavelet, halo=halo,
+        ))[:30]
+        want = np.asarray(features.wpd_features(
+            jnp.asarray(den), level=cfg.wpd_level, wavelet_name=cfg.wavelet
+        ))
+        np.testing.assert_array_equal(got, want)
+
+    def test_multi_matrix_chunk_inner_halos_from_padded_order(
+        self, seam_stream, signal_cfg
+    ):
+        # A 90-window chunk at overlap=2 spans two denoise matrices:
+        # matrix 0 takes the carried halo, matrix 1 takes the last 2 raw
+        # windows of matrix 0 in PADDED order (halos are raw windows, so
+        # they never depend on denoise output).
+        cfg = signal_cfg._replace(overlap=2)
+        chunk = seam_stream[: 90]
+        halo = jnp.zeros((2, *chunk.shape[1:]), jnp.float32)
+        got = np.asarray(frontend.chunk_features(
+            jnp.asarray(chunk), cfg, halo=halo
+        ))
+        padded = np.asarray(jnp.resize(
+            jnp.asarray(chunk), (2 * PER, *chunk.shape[1:])
+        ))
+        den0 = np.asarray(mspca.denoise_windows(
+            jnp.asarray(padded[:PER]), level=cfg.mspca_level,
+            wavelet_name=cfg.wavelet, halo=halo,
+        ))
+        den1 = np.asarray(mspca.denoise_windows(
+            jnp.asarray(padded[PER:]), level=cfg.mspca_level,
+            wavelet_name=cfg.wavelet,
+            halo=jnp.asarray(padded[PER - 2 : PER]),
+        ))
+        den = np.concatenate([den0, den1])[:90]
+        want = np.asarray(features.wpd_features(
+            jnp.asarray(den), level=cfg.wpd_level, wavelet_name=cfg.wavelet
+        ))
+        np.testing.assert_array_equal(got, want)
+
+    def test_nonstandard_chunk_engine_matches_manual_halo_pipeline(
+        self, overlap_program, fitted, chunk_pool
+    ):
+        # End to end: a chunk_windows=30 engine at overlap=2, replayed 2
+        # deep. Each scored sub-chunk must equal the manual wrap-pad +
+        # carried-halo denoise above, normalized and voted by the same
+        # forest -- i.e. the sequential process_windows run at cw
+        # granularity via the carried state.
+        quiet, pre = chunk_pool
+        stream = np.concatenate([quiet, pre])  # 120 windows -> 4 x 30
+        cfg = overlap_program.cfg
+        cw = 30
+        engine = api.SeizureEngine(
+            overlap_program, max_batch=1, chunk_windows=cw, replay_depth=2
+        )
+        engine.open_session(0).push(stream)
+        scored = [e for e in engine.poll() if isinstance(e, api.ChunkScored)]
+        assert len(scored) == 4
+        state = frontend.init_state(overlap=cfg.overlap)
+        for j, e in enumerate(scored):
+            state, feats = frontend.frontend_step(
+                state, jnp.asarray(stream[j * cw : (j + 1) * cw]), cfg
+            )
+            normed, _, _ = features.normalize(
+                feats, fitted.feat_mean, fitted.feat_std
+            )
+            want = rf.predict(fitted.forest, normed)
+            np.testing.assert_array_equal(
+                e.window_preds, np.asarray(want, np.int32)
+            )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis twins (drawn inputs through the same checkers)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # CI installs hypothesis; local runs may lack it
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    def _draw_stream(data, n_chunks=2):
+        key = data.draw(st.integers(0, 2**16 - 1), label="stream_key")
+        pid = data.draw(st.integers(0, 19), label="patient")
+        state = data.draw(
+            st.sampled_from([eeg_data.INTERICTAL, eeg_data.PREICTAL]),
+            label="regime",
+        )
+        return np.asarray(eeg_data.generate_windows(
+            jax.random.PRNGKey(key), jnp.asarray(pid), state, n_chunks * PER
+        ))
+
+    @given(data=st.data())
+    def test_overlap_zero_bit_identity_any_stream(signal_cfg, data):
+        stream = _draw_stream(data)
+        got = np.asarray(pipeline.process_windows(
+            jnp.asarray(stream), signal_cfg
+        ))
+        np.testing.assert_array_equal(
+            got, manual_pre_overlap_features(stream, signal_cfg)
+        )
+
+    @given(data=st.data())
+    def test_overlap_reduces_worst_seam_error_any_stream(data):
+        # Strict per-stream monotonicity needs a halo wide enough to
+        # move the PCA bases: at h=1 (3 of 183 columns) the worst-seam
+        # delta is +0.05 dB in the median but can dip ~0.02 dB negative
+        # on some streams, so the universally-quantified property is
+        # pinned at h in {4, 8} (min +0.18 dB over 30 pilot streams)
+        # with a no-degradation bound on the shallow step. The strict
+        # {0,1,2} chain is pinned deterministically on the seam-oracle
+        # fixture (TestSeamOracle) and ablated in bench_mspca_denoise.
+        stream = _draw_stream(data)
+        reference = np.asarray(mspca.denoise_windows(jnp.asarray(stream)))
+        snr = {
+            h: worst_seam_snr_db(reference, chunked_denoise(stream, h))
+            for h in (0, 1, 4, 8)
+        }
+        assert snr[8] > snr[0]
+        assert snr[4] > snr[0]
+        assert snr[8] >= snr[4] - 0.05
+        assert snr[1] >= snr[0] - 0.05
+
+    @given(data=st.data())
+    def test_any_chunk_aligned_split_matches_oneshot_overlap(
+        seam_stream, signal_cfg, data
+    ):
+        overlap = data.draw(st.integers(1, 3), label="overlap")
+        cfg = signal_cfg._replace(overlap=overlap)
+        total = seam_stream.shape[0]
+        sizes, left = [], total
+        while left > 0:
+            n = data.draw(st.integers(1, min(120, left)), label="split")
+            sizes.append(n)
+            left -= n
+        check_split_matches_oneshot(seam_stream, cfg, sizes)

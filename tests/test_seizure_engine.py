@@ -11,49 +11,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import rotation_forest as rf
 from repro.serving import api
 from repro.signal import eeg_data, pipeline
 
+# Shared fixtures (small_cfg, fitted, program, timeline, chunk_pool, the
+# overlap twins, and the seam-oracle stream) live in tests/conftest.py.
+
 PER = eeg_data.WINDOWS_PER_MATRIX
-
-
-@pytest.fixture(scope="module")
-def small_cfg():
-    return pipeline.PipelineConfig(
-        forest=rf.RotationForestConfig(
-            n_trees=6, n_subsets=3, depth=5, n_classes=2, n_bins=16
-        )
-    )
-
-
-@pytest.fixture(scope="module")
-def fitted(small_cfg):
-    rec = eeg_data.make_training_set(
-        jax.random.PRNGKey(42), 3, n_interictal_windows=60, n_preictal_windows=60
-    )
-    return pipeline.fit(jax.random.PRNGKey(1), rec, small_cfg)
-
-
-@pytest.fixture(scope="module")
-def program(fitted, small_cfg):
-    return api.ScoringProgram.from_fitted(fitted, small_cfg)
-
-
-@pytest.fixture(scope="module")
-def timeline():
-    return eeg_data.make_test_timeline(
-        jax.random.PRNGKey(7), 3, hours_interictal=1, minutes_preictal=48
-    )
-
-
-@pytest.fixture(scope="module")
-def chunk_pool(timeline):
-    """(quiet, preictal) chunks: vote 0 and vote 1 under the fitted forest."""
-    wins = np.asarray(timeline.windows)
-    n = wins.shape[0] // PER
-    chunks = wins[: n * PER].reshape(n, PER, *wins.shape[1:])
-    return chunks[0], chunks[-1]
 
 
 def oracle_timeline(fitted, cfg, windows):
@@ -71,17 +35,23 @@ def scored_events(events):
 
 def oracle_chunks(fitted, cfg, chunks):
     """Per-patient oracle over a list of (PER, C, N) chunks: window preds
-    -> chunk majority votes -> k-of-m alarm scan, all via signal.pipeline."""
-    preds = [
-        pipeline.predict_windows(fitted, jnp.asarray(c), cfg) for c in chunks
-    ]
-    votes = pipeline.chunk_predictions(jnp.concatenate(preds), cfg)
+    -> chunk majority votes -> k-of-m alarm scan, all via signal.pipeline.
+    The chunks are featurized as ONE sequential stream (concatenated in
+    push order) so the carried frontend context -- the denoise halo when
+    ``cfg.overlap > 0`` -- flows across them exactly as a session's
+    does; with ``overlap == 0`` this is bit-identical to featurizing
+    each chunk independently (chunk independence, pinned elsewhere)."""
+    preds = pipeline.predict_windows(
+        fitted, jnp.asarray(np.concatenate(chunks)), cfg
+    )
+    votes = pipeline.chunk_predictions(preds, cfg)
     alarms = pipeline.alarm_state(votes, cfg)
     return np.asarray(votes).tolist(), np.asarray(alarms).tolist()
 
 
 def run_interleaving(
-    program, fitted, pool, *, max_batch, streams, open_order, seed
+    program, fitted, pool, *, max_batch, streams, open_order, seed,
+    replay_depth=1,
 ):
     """Drive a ``SeizureEngine`` over randomly interleaved multi-patient
     streams (random push sizes, sporadic polls, optional unscored tail
@@ -90,6 +60,8 @@ def run_interleaving(
 
     streams    : {patient_id: (list of pool chunk indices, extra_windows)}
     open_order : session creation order (may differ from push order)
+    replay_depth : engine's in-step backlog scan depth (>1 exercises the
+                 bucketed replay path under the same oracle)
     """
     cfg = program.cfg
     rng = np.random.RandomState(seed)
@@ -101,7 +73,9 @@ def run_interleaving(
         for pid, (_, extra) in streams.items()
     }
 
-    engine = api.SeizureEngine(program, max_batch=max_batch)
+    engine = api.SeizureEngine(
+        program, max_batch=max_batch, replay_depth=replay_depth
+    )
     sessions = {pid: engine.open_session(pid) for pid in open_order}
 
     # Split each stream into random-size pushes; interleave across

@@ -2,7 +2,11 @@
 dimensions (head counts, expert counts, vocab sizes -- aligned or not),
 every produced PartitionSpec must be mesh-valid.  This is the invariant
 the mixtral (8 experts on tp=16) and deepseek (56 heads on tp=16) bugs
-violated silently before the guards existed."""
+violated silently before the guards existed.
+
+Settings come from the profile registered in ``tests/conftest.py``
+("ci": few derandomized examples on the PR gate; "deep": the nightly
+fuzzing job in ci.yml) -- no per-test @settings."""
 
 from __future__ import annotations
 
@@ -12,7 +16,7 @@ import jax
 import pytest
 
 pytest.importorskip("hypothesis")  # property tests need hypothesis; CI installs it
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from conftest import abstract_mesh
@@ -47,7 +51,6 @@ def _assert_valid(shapes, specs):
     d_mult=st.integers(1, 8),
     strategy=st.sampled_from(["2d", "fsdp", "dp", "dp_vocab"]),
 )
-@settings(max_examples=40, deadline=None)
 def test_dense_param_specs_always_valid(heads, kv_div, d_mult, strategy):
     kv = max(1, heads // kv_div)
     if heads % kv:
@@ -66,7 +69,6 @@ def test_dense_param_specs_always_valid(heads, kv_div, d_mult, strategy):
     topk=st.integers(1, 4),
     d_ff=st.sampled_from([48, 64, 256, 768]),
 )
-@settings(max_examples=30, deadline=None)
 def test_moe_param_specs_always_valid(experts, topk, d_ff):
     cfg = dataclasses.replace(
         get_config("qwen3-moe-30b-a3b").reduced(),
@@ -76,7 +78,6 @@ def test_moe_param_specs_always_valid(experts, topk, d_ff):
 
 
 @given(batch=st.integers(1, 512), seq=st.sampled_from([64, 4096, 32768]))
-@settings(max_examples=30, deadline=None)
 def test_cache_specs_always_valid(batch, seq):
     cfg = get_config("qwen3-0.6b")
     cache = build(cfg).cache_shapes(batch, seq)
