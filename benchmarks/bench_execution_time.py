@@ -20,7 +20,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import Rows, time_fn
 from repro.configs.eeg_paper import CONFIG

@@ -57,7 +57,16 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            fn(rows, smoke=args.smoke) if takes_smoke else fn(rows)
+            # Count XLA compilations per bench (repro.analysis
+            # sanitizers): a jump in a bench's compile count between
+            # artifacts flags a recompile regression (shape/weak-type
+            # drift) even when the timed rows still look healthy.
+            from repro.analysis.sanitizers import CompileCounter
+
+            with CompileCounter() as cc:
+                fn(rows, smoke=args.smoke) if takes_smoke else fn(rows)
+            rows.add(f"{name}/compiles", float(cc.total),
+                     "XLA compilations during the bench")
         except Exception as e:  # keep the harness going; report
             failures += 1
             rows.add(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")

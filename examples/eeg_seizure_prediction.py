@@ -19,7 +19,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.eeg_paper import CONFIG
-from repro.core import mapreduce as mr
 from repro.signal import eeg_data, pipeline
 
 

@@ -8,7 +8,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.configs.base import InputShape

@@ -1,0 +1,75 @@
+"""Static analysis subsystem: contract checker + AST lint + sanitizers.
+
+``python -m repro.analysis`` traces every registered hot entry point
+(``registry``) at pinned abstract shapes, runs the jaxpr/StableHLO
+contract rules (``contracts``) and the repo-specific AST lint
+(``lint``), subtracts the committed suppressions (``suppressions.json``,
+every entry with a written reason), and emits a JSON report. Exit code
+0 iff no unsuppressed violation remains -- the CI ``analysis`` job is
+exactly this command.
+
+The dynamic half lives in ``sanitizers`` (compile counter + transfer
+guards) and is wired into the test suite via ``tests/conftest.py`` and
+into ``benchmarks/run.py --smoke`` (per-bench compile counts).
+"""
+
+from __future__ import annotations
+
+from repro.analysis.base import (
+    Suppression,
+    Violation,
+    load_budgets,
+    load_suppressions,
+    split_suppressed,
+)
+
+
+def run_analysis(include_contracts: bool = True, include_lint: bool = True):
+    """Run the full static suite; returns the report dict.
+
+    ``report["violations"]`` is the LIVE (unsuppressed) list; a clean
+    tree has it empty. Suppressed findings are still reported, each with
+    the committed reason, so the report is an honest inventory rather
+    than a filtered one.
+    """
+    from repro.analysis import contracts, lint, registry
+
+    violations: list[Violation] = []
+    entry_rows: list[dict] = []
+    rule_ids: list[str] = []
+    if include_contracts:
+        entries = registry.build_registry()
+        found, entry_rows = contracts.check_registry(entries)
+        violations.extend(found)
+        rule_ids.extend(sorted(contracts.RULES))
+    if include_lint:
+        violations.extend(lint.check_tree())
+        rule_ids.extend(sorted(lint.RULES))
+
+    suppressions = load_suppressions()
+    live, quiet = split_suppressed(violations, suppressions)
+    return {
+        "generated_by": "python -m repro.analysis",
+        "rules": rule_ids,
+        "entries": entry_rows,
+        "violations": [v.as_dict() for v in live],
+        "suppressed": [
+            {**v.as_dict(), "reason": s.reason} for v, s in quiet
+        ],
+        "summary": {
+            "rules": len(rule_ids),
+            "entries_traced": len(entry_rows),
+            "violations": len(live),
+            "suppressed": len(quiet),
+        },
+    }
+
+
+__all__ = [
+    "Suppression",
+    "Violation",
+    "load_budgets",
+    "load_suppressions",
+    "split_suppressed",
+    "run_analysis",
+]

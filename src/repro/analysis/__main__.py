@@ -1,0 +1,69 @@
+"""CLI for the static analysis suite.
+
+    python -m repro.analysis                  # human summary, exit != 0 on
+                                              # unsuppressed violations
+    python -m repro.analysis --json report.json
+    python -m repro.analysis --lint-only / --contracts-only
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import run_analysis
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr/HLO contract checker + AST lint for the "
+        "registered hot entry points",
+    )
+    p.add_argument(
+        "--json", metavar="PATH",
+        help="write the full JSON report to PATH ('-' for stdout)",
+    )
+    p.add_argument(
+        "--lint-only", action="store_true",
+        help="run only the AST lint pass (no tracing)",
+    )
+    p.add_argument(
+        "--contracts-only", action="store_true",
+        help="run only the traced contract rules",
+    )
+    args = p.parse_args(argv)
+    if args.lint_only and args.contracts_only:
+        p.error("--lint-only and --contracts-only are mutually exclusive")
+
+    report = run_analysis(
+        include_contracts=not args.lint_only,
+        include_lint=not args.contracts_only,
+    )
+
+    if args.json == "-":
+        json.dump(report, sys.stdout, indent=2)
+        sys.stdout.write("\n")
+    elif args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+
+    s = report["summary"]
+    print(
+        f"analysis: {s['rules']} rules, {s['entries_traced']} entry "
+        f"points traced, {s['violations']} violations, "
+        f"{s['suppressed']} suppressed"
+    )
+    for row in report["entries"]:
+        print(f"  traced {row['entry']:44s} {row['violations']} violation(s)")
+    for v in report["suppressed"]:
+        print(f"  suppressed [{v['rule']}] {v['subject']}")
+    for v in report["violations"]:
+        print(f"  VIOLATION [{v['rule']}] {v['subject']}: {v['message']}")
+    return 1 if report["violations"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

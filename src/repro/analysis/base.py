@@ -1,0 +1,95 @@
+"""Shared types for the static contract checker: violations, the
+committed suppressions file, and the pinned budgets file.
+
+A violation is (rule, subject, message); ``subject`` is either a
+registered entry-point name (``contracts``) or a ``path:line`` location
+(``lint``). Deliberate exemptions live in ``suppressions.json`` next to
+this module -- every entry MUST carry a non-empty ``reason`` string, so
+an exemption is always a documented decision, never a silent skip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+_HERE = os.path.dirname(__file__)
+SUPPRESSIONS_PATH = os.path.join(_HERE, "suppressions.json")
+BUDGETS_PATH = os.path.join(_HERE, "budgets.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One contract/lint finding.
+
+    rule    : rule id (see contracts.RULES / lint.RULES).
+    subject : entry-point name or ``path:line`` the finding anchors to.
+    message : human-readable description of the violation.
+    """
+
+    rule: str
+    subject: str
+    message: str
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """A committed exemption: (rule, subject-prefix) plus WHY."""
+
+    rule: str
+    subject: str  # exact entry name, or a path prefix for lint subjects
+    reason: str
+
+    def matches(self, v: Violation) -> bool:
+        return v.rule == self.rule and (
+            v.subject == self.subject or v.subject.startswith(self.subject)
+        )
+
+
+def load_suppressions(path: str = SUPPRESSIONS_PATH) -> list[Suppression]:
+    """Load (and validate) the committed suppressions file."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        raw = json.load(f)
+    out = []
+    for i, entry in enumerate(raw):
+        reason = entry.get("reason", "").strip()
+        if not reason:
+            raise ValueError(
+                f"suppressions.json entry {i} ({entry.get('rule')!r}, "
+                f"{entry.get('subject')!r}) has no reason -- every "
+                "exemption must say why"
+            )
+        out.append(
+            Suppression(
+                rule=entry["rule"], subject=entry["subject"], reason=reason
+            )
+        )
+    return out
+
+
+def load_budgets(path: str = BUDGETS_PATH) -> dict:
+    """The pinned recompile budgets (the compile-count analogue of
+    ``benchmarks/baseline_smoke.json``)."""
+    with open(path) as f:
+        return json.load(f)
+
+
+def split_suppressed(
+    violations: list[Violation], suppressions: list[Suppression]
+) -> tuple[list[Violation], list[tuple[Violation, Suppression]]]:
+    """Partition violations into (live, [(suppressed, matching rule)])."""
+    live: list[Violation] = []
+    quiet: list[tuple[Violation, Suppression]] = []
+    for v in violations:
+        hit = next((s for s in suppressions if s.matches(v)), None)
+        if hit is None:
+            live.append(v)
+        else:
+            quiet.append((v, hit))
+    return live, quiet

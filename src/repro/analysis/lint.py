@@ -1,0 +1,435 @@
+"""AST lint pass over ``src/repro`` for repo-specific hazards ruff
+cannot express.
+
+These rules all need semantic context a generic linter lacks: which
+functions are reachable from a jitted entry point, which modules are on
+the hot path, which names form the repo's public surface. Subjects are
+``path:line`` (repo-relative), so suppressions can pin an exact site or
+a path prefix.
+
+  numpy-in-jit                ``np.*`` CALLS in functions reachable from
+                              a jitted body. A numpy call on a tracer
+                              either crashes or silently falls back to a
+                              host round-trip per step; dtype/constant
+                              attributes (``np.float32``, ``np.pi``) are
+                              exempt -- they are trace-time scalars.
+  host-coercion-in-jit        ``.item()`` / ``jax.device_get`` /
+                              ``.block_until_ready()`` in jit-reachable
+                              code: forced device->host syncs.
+  jnp-construction-in-host-loop  ``jnp.array/asarray/zeros/...`` inside a
+                              Python for/while loop in a hot module.
+                              In host code that is one dispatch+transfer
+                              per iteration; in traced code it unrolls
+                              into per-iteration constants. Either way
+                              the array belongs outside the loop.
+  kernel-interpret-fallback   a ``kernels/*/ops.py`` entry point that
+                              never passes ``interpret=`` to its kernel:
+                              on this CPU container such a kernel is
+                              untestable (Pallas TPU lowering only), so
+                              every op must plumb interpret-mode.
+  unreferenced-export         a name in a module's ``__all__`` that no
+                              other file in the repo (src, tests,
+                              examples, benchmarks) references: the
+                              dead-code detector behind the PR 7
+                              quarantine sweep.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from repro.analysis.base import Violation
+
+# Modules whose host-side loops are on the serving/training hot path.
+HOT_MODULE_PREFIXES = (
+    "src/repro/serving/",
+    "src/repro/signal/",
+    "src/repro/core/",
+    "src/repro/kernels/",
+)
+
+# np.<attr> uses that are trace-time scalars/types, not host array ops.
+_NP_BENIGN = {
+    "float32", "float64", "int8", "int32", "int64", "uint8", "uint32",
+    "uint64", "bool_", "ndarray", "dtype", "generic", "number",
+    "pi", "e", "inf", "nan", "newaxis", "integer", "floating",
+}
+
+_JNP_CONSTRUCTORS = {
+    "array", "asarray", "zeros", "ones", "full", "arange", "linspace",
+    "eye", "zeros_like", "ones_like", "full_like",
+}
+
+_SYNC_METHODS = {"item", "block_until_ready"}
+
+
+def _repo_root() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))  # src/repro/analysis
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def iter_py_files(root: str, subdirs=("src/repro",)):
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        for dirpath, _, files in os.walk(base):
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(dirpath, f)
+
+
+def _rel(root: str, path: str) -> str:
+    return os.path.relpath(path, root)
+
+
+class _Module:
+    """Parsed module + the bits of semantic context the rules need."""
+
+    def __init__(self, root: str, path: str):
+        self.path = path
+        self.rel = _rel(root, path)
+        with open(path) as f:
+            self.src = f.read()
+        self.tree = ast.parse(self.src, filename=self.rel)
+        # top-level function defs by name
+        self.functions: dict[str, ast.AST] = {
+            n.name: n
+            for n in self.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        # alias -> dotted repro module name, from `from repro.x import y`
+        # and `import repro.x as z` (for cross-module call resolution)
+        self.module_aliases: dict[str, str] = {}
+        # alias -> (module, name) for `from repro.x import fn`
+        self.imported_names: dict[str, tuple[str, str]] = {}
+        for n in ast.walk(self.tree):
+            if isinstance(n, ast.ImportFrom) and n.module and (
+                n.module == "repro" or n.module.startswith("repro.")
+            ):
+                for a in n.names:
+                    local = a.asname or a.name
+                    child = f"{n.module}.{a.name}"
+                    self.module_aliases[local] = child
+                    self.imported_names[local] = (n.module, a.name)
+            elif isinstance(n, ast.Import):
+                for a in n.names:
+                    if a.name.startswith("repro"):
+                        self.module_aliases[a.asname or a.name] = a.name
+
+    @property
+    def dotted(self) -> str:
+        rel = self.rel
+        for prefix in ("src/",):
+            if rel.startswith(prefix):
+                rel = rel[len(prefix):]
+        rel = rel[:-3] if rel.endswith(".py") else rel
+        if rel.endswith("/__init__"):
+            rel = rel[: -len("/__init__")]
+        return rel.replace("/", ".")
+
+    def dunder_all(self) -> list[tuple[str, int]]:
+        for n in self.tree.body:
+            if isinstance(n, ast.Assign):
+                for t in n.targets:
+                    if isinstance(t, ast.Name) and t.id == "__all__":
+                        if isinstance(n.value, (ast.List, ast.Tuple)):
+                            return [
+                                (e.value, e.lineno)
+                                for e in n.value.elts
+                                if isinstance(e, ast.Constant)
+                                and isinstance(e.value, str)
+                            ]
+        return []
+
+
+def load_modules(root: str | None = None) -> list[_Module]:
+    root = root or _repo_root()
+    return [_Module(root, p) for p in iter_py_files(root)]
+
+
+# ---------------------------------------------------------------------------
+# Jit-reachability closure.
+# ---------------------------------------------------------------------------
+
+def _is_jit_expr(node) -> bool:
+    """Does this expression evaluate to jax.jit or a partial of it?"""
+    if isinstance(node, ast.Attribute) and node.attr == "jit":
+        return True
+    if isinstance(node, ast.Name) and node.id == "jit":
+        return True
+    if isinstance(node, ast.Call):
+        # functools.partial(jax.jit, ...)
+        if any(_is_jit_expr(a) for a in node.args):
+            return True
+        return _is_jit_expr(node.func)
+    return False
+
+
+def _jit_roots(mod: _Module) -> set[str]:
+    """Top-level function names jitted in this module (decorator or
+    ``name = jax.jit(fn)`` / ``partial(jax.jit, ...)(fn)`` wrapping)."""
+    roots: set[str] = set()
+    for name, fn in mod.functions.items():
+        if any(_is_jit_expr(d) for d in fn.decorator_list):
+            roots.add(name)
+    for n in mod.tree.body:
+        if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+            call = n.value
+            if _is_jit_expr(call.func):
+                for a in call.args:
+                    if isinstance(a, ast.Name) and a.id in mod.functions:
+                        roots.add(a.id)
+    return roots
+
+
+def _called_functions(fn_node, mod: _Module, by_dotted: dict):
+    """(module, fn_name) pairs this function body calls, resolvable
+    either locally or through a repro import."""
+    out = []
+    for n in ast.walk(fn_node):
+        if not isinstance(n, ast.Call):
+            continue
+        f = n.func
+        if isinstance(f, ast.Name):
+            if f.id in mod.functions:
+                out.append((mod, f.id))
+            elif f.id in mod.imported_names:
+                owner, name = mod.imported_names[f.id]
+                target = by_dotted.get(owner)
+                if target is not None and name in target.functions:
+                    out.append((target, name))
+        elif isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+            owner_name = mod.module_aliases.get(f.value.id)
+            if owner_name is not None:
+                target = by_dotted.get(owner_name)
+                if target is not None and f.attr in target.functions:
+                    out.append((target, f.attr))
+    return out
+
+
+def jit_reachable(modules: list[_Module]) -> set[tuple[str, str]]:
+    """(module.rel, fn_name) closure reachable from any jitted root,
+    following same-module calls and repro cross-module imports."""
+    by_dotted = {m.dotted: m for m in modules}
+    seen: set[tuple[str, str]] = set()
+    frontier: list[tuple[_Module, str]] = []
+    for m in modules:
+        for name in _jit_roots(m):
+            frontier.append((m, name))
+    while frontier:
+        mod, name = frontier.pop()
+        key = (mod.rel, name)
+        if key in seen or name not in mod.functions:
+            continue
+        seen.add(key)
+        frontier.extend(
+            _called_functions(mod.functions[name], mod, by_dotted)
+        )
+    return seen
+
+
+# ---------------------------------------------------------------------------
+# Rules.
+# ---------------------------------------------------------------------------
+
+def _np_aliases(mod: _Module) -> set[str]:
+    names = set()
+    for n in ast.walk(mod.tree):
+        if isinstance(n, ast.Import):
+            for a in n.names:
+                if a.name == "numpy":
+                    names.add(a.asname or "numpy")
+    return names
+
+
+def rule_numpy_in_jit(modules, reachable):
+    out = []
+    for mod in modules:
+        np_names = _np_aliases(mod)
+        if not np_names:
+            continue
+        for fname, fn in mod.functions.items():
+            if (mod.rel, fname) not in reachable:
+                continue
+            for n in ast.walk(fn):
+                if not isinstance(n, ast.Call):
+                    continue
+                f = n.func
+                if (
+                    isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id in np_names
+                    and f.attr not in _NP_BENIGN
+                ):
+                    out.append(Violation(
+                        rule="numpy-in-jit",
+                        subject=f"{mod.rel}:{n.lineno}",
+                        message=(
+                            f"np.{f.attr}(...) in {fname}(), which is "
+                            "reachable from a jitted entry point: a "
+                            "host-side numpy call on traced values"
+                        ),
+                    ))
+    return out
+
+
+def rule_host_coercion_in_jit(modules, reachable):
+    out = []
+    for mod in modules:
+        for fname, fn in mod.functions.items():
+            if (mod.rel, fname) not in reachable:
+                continue
+            for n in ast.walk(fn):
+                if not isinstance(n, ast.Call):
+                    continue
+                f = n.func
+                if isinstance(f, ast.Attribute) and f.attr in _SYNC_METHODS:
+                    out.append(Violation(
+                        rule="host-coercion-in-jit",
+                        subject=f"{mod.rel}:{n.lineno}",
+                        message=(
+                            f".{f.attr}() in jit-reachable {fname}(): a "
+                            "forced device->host sync on the hot path"
+                        ),
+                    ))
+                elif (
+                    isinstance(f, ast.Attribute)
+                    and f.attr == "device_get"
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "jax"
+                ):
+                    out.append(Violation(
+                        rule="host-coercion-in-jit",
+                        subject=f"{mod.rel}:{n.lineno}",
+                        message=(
+                            f"jax.device_get in jit-reachable {fname}(): "
+                            "a device->host transfer inside traced code"
+                        ),
+                    ))
+    return out
+
+
+def rule_jnp_construction_in_host_loop(modules, reachable):
+    del reachable
+    out = []
+    for mod in modules:
+        if not any(mod.rel.startswith(p) for p in HOT_MODULE_PREFIXES):
+            continue
+        for n in ast.walk(mod.tree):
+            if not isinstance(n, (ast.For, ast.While)):
+                continue
+            for inner in ast.walk(n):
+                if not isinstance(inner, ast.Call):
+                    continue
+                f = inner.func
+                if (
+                    isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "jnp"
+                    and f.attr in _JNP_CONSTRUCTORS
+                ):
+                    out.append(Violation(
+                        rule="jnp-construction-in-host-loop",
+                        subject=f"{mod.rel}:{inner.lineno}",
+                        message=(
+                            f"jnp.{f.attr}(...) inside a Python "
+                            f"{'for' if isinstance(n, ast.For) else 'while'}"
+                            " loop in a hot module: one device array per "
+                            "iteration (dispatch overhead in host code, "
+                            "unrolled constants in traced code) -- hoist "
+                            "it or vectorize the loop"
+                        ),
+                    ))
+    return out
+
+
+def rule_kernel_interpret_fallback(modules, reachable):
+    del reachable
+    out = []
+    for mod in modules:
+        parts = mod.rel.split(os.sep)
+        if (
+            len(parts) < 4
+            or parts[:3] != ["src", "repro", "kernels"]
+            or parts[-1] != "ops.py"
+        ):
+            continue
+        passes_interpret = any(
+            isinstance(n, ast.keyword) and n.arg == "interpret"
+            for n in ast.walk(mod.tree)
+        )
+        if not passes_interpret:
+            out.append(Violation(
+                rule="kernel-interpret-fallback",
+                subject=f"{mod.rel}:1",
+                message=(
+                    "kernel op module never passes interpret= to its "
+                    "kernel: the Pallas path cannot run (or be tested) "
+                    "off-TPU -- plumb an interpret-mode fallback"
+                ),
+            ))
+    return out
+
+
+def rule_unreferenced_export(modules, reachable, root=None):
+    del reachable
+    root = root or _repo_root()
+    # Reference corpus: every python file in the repo EXCEPT the
+    # defining module itself.
+    corpus: dict[str, str] = {}
+    for sub in ("src/repro", "tests", "examples", "benchmarks", "launch"):
+        base = os.path.join(root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _, files in os.walk(base):
+            for f in files:
+                if f.endswith(".py"):
+                    p = os.path.join(dirpath, f)
+                    with open(p) as fh:
+                        corpus[_rel(root, p)] = fh.read()
+    out = []
+    for mod in modules:
+        for name, lineno in mod.dunder_all():
+            referenced = False
+            for rel, src in corpus.items():
+                if rel == mod.rel:
+                    continue
+                if name in src:
+                    # cheap containment prefilter, then a word check
+                    if re.search(rf"\b{re.escape(name)}\b", src):
+                        referenced = True
+                        break
+            if not referenced:
+                out.append(Violation(
+                    rule="unreferenced-export",
+                    subject=f"{mod.rel}:{lineno}",
+                    message=(
+                        f"__all__ export {name!r} is referenced nowhere "
+                        "else in src/tests/examples/benchmarks/launch: "
+                        "dead public surface -- remove it or mark the "
+                        "quarantine reason in a suppression"
+                    ),
+                ))
+    return out
+
+
+RULES = {
+    "numpy-in-jit": rule_numpy_in_jit,
+    "host-coercion-in-jit": rule_host_coercion_in_jit,
+    "jnp-construction-in-host-loop": rule_jnp_construction_in_host_loop,
+    "kernel-interpret-fallback": rule_kernel_interpret_fallback,
+    "unreferenced-export": rule_unreferenced_export,
+}
+
+
+def check_tree(root: str | None = None) -> list[Violation]:
+    """Run every lint rule over src/repro."""
+    root = root or _repo_root()
+    modules = load_modules(root)
+    reachable = jit_reachable(modules)
+    violations: list[Violation] = []
+    for rule in RULES.values():
+        violations.extend(rule(modules, reachable))
+    violations.sort(key=lambda v: (v.rule, v.subject))
+    return violations

@@ -1,0 +1,120 @@
+"""Runtime sanitizers: the dynamic half of the analysis subsystem.
+
+The contract checker (``contracts``) proves properties of the TRACED
+program; these helpers watch the RUNNING one:
+
+  * ``CompileCounter`` -- counts XLA compilations via
+    ``jax.log_compiles`` (a logging handler on jax's dispatch logger,
+    no private state). Used by ``tests/test_analysis.py`` to enforce the
+    pinned recompile budgets in ``budgets.json`` (steady-state engine:
+    EXACTLY one compile) and by ``benchmarks/run.py --smoke`` to record
+    a ``<bench>/compiles`` row per benchmark.
+  * ``guard_methods`` -- wraps selected bound methods in
+    ``jax.transfer_guard("disallow")`` so any implicit host<->device
+    transfer inside them raises. The conftest
+    ``device_transfer_sanitizer`` fixture applies this to the serving
+    engine and streaming front-end hot methods for the whole engine/
+    frontend test suites: the explicit ``jax.device_put``/``device_get``
+    calls on those paths are the ONLY legal crossings.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import logging
+import re
+
+import jax
+
+_DISPATCH_LOGGER = "jax._src.dispatch"
+_COMPILE_RE = re.compile(r"Finished XLA compilation of (\S+) in")
+
+
+class _CompileLogHandler(logging.Handler):
+    def __init__(self, counter: "CompileCounter"):
+        super().__init__(level=logging.DEBUG)
+        self._counter = counter
+
+    def emit(self, record: logging.LogRecord) -> None:
+        m = _COMPILE_RE.search(record.getMessage())
+        if m:
+            self._counter._record(m.group(1))
+
+
+class CompileCounter:
+    """Counts XLA compilations while active (context manager, reusable).
+
+    >>> with CompileCounter() as cc:
+    ...     run_the_loop()
+    >>> cc.total, cc.by_name  # {'jit(_engine_step)': 1, ...}
+    """
+
+    def __init__(self):
+        self.by_name: dict[str, int] = {}
+        self._stack = None
+
+    def _record(self, name: str) -> None:
+        self.by_name[name] = self.by_name.get(name, 0) + 1
+
+    @property
+    def total(self) -> int:
+        return sum(self.by_name.values())
+
+    def count(self, substring: str) -> int:
+        """Compilations whose jit name contains ``substring``."""
+        return sum(
+            n for name, n in self.by_name.items() if substring in name
+        )
+
+    def __enter__(self) -> "CompileCounter":
+        self._stack = contextlib.ExitStack()
+        self._stack.enter_context(jax.log_compiles())
+        handler = _CompileLogHandler(self)
+        logger = logging.getLogger(_DISPATCH_LOGGER)
+        logger.addHandler(handler)
+        self._stack.callback(logger.removeHandler, handler)
+        # log_compiles emits at WARNING; keep the records (our handler
+        # sees them) but stop them flooding the console while counting.
+        for name in (_DISPATCH_LOGGER, "jax._src.interpreters.pxla"):
+            lg = logging.getLogger(name)
+            prev = lg.propagate
+            lg.propagate = False
+            self._stack.callback(setattr, lg, "propagate", prev)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._stack.close()
+        self._stack = None
+
+
+def _guarded(fn):
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        with jax.transfer_guard("disallow"):
+            return fn(*args, **kwargs)
+
+    wrapper.__wrapped_by_transfer_guard__ = True
+    return wrapper
+
+
+@contextlib.contextmanager
+def guard_methods(obj, *method_names: str):
+    """Temporarily wrap ``obj``'s named methods in
+    ``jax.transfer_guard("disallow")``.
+
+    Instance-level monkeypatch, restored on exit; idempotent (already-
+    guarded methods are left alone) so nested fixtures compose.
+    """
+    originals = {}
+    for name in method_names:
+        fn = getattr(obj, name)
+        if getattr(fn, "__wrapped_by_transfer_guard__", False):
+            continue
+        originals[name] = fn
+        setattr(obj, name, _guarded(fn))
+    try:
+        yield obj
+    finally:
+        for name, fn in originals.items():
+            setattr(obj, name, fn)

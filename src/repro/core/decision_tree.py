@@ -118,6 +118,8 @@ def fit_binned(
     split_feature = jnp.full((max_nodes,), -1, jnp.int32)
     split_bin = jnp.full((max_nodes,), n_bins, jnp.int32)
     assignment = jnp.ones((n,), jnp.int32)  # heap id per sample, root = 1
+    feat_ids = jnp.arange(f)  # loop-invariant gather rows
+    samp_ids = jnp.arange(n)
 
     # NOTE: per-level histogram shapes differ (2**level nodes), so this is a
     # Python loop -- unrolled at trace time (depth is a static argument).
@@ -129,7 +131,7 @@ def fit_binned(
         flat_idx = local[:, None] * n_bins + xb  # (N, F)
         hist = jnp.zeros((f, nodes_at * n_bins, n_classes), jnp.float32)
         hist = hist.at[
-            jnp.arange(f)[None, :], flat_idx, y[:, None]
+            feat_ids[None, :], flat_idx, y[:, None]
         ].add(w[:, None])
         hist = hist.reshape(f, nodes_at, n_bins, n_classes)
 
@@ -168,7 +170,7 @@ def fit_binned(
         # Route samples. Dead nodes (feat == -1, bin == n_bins) send all left.
         samp_feat = jnp.where(best_feat[local] < 0, 0, best_feat[local])
         go_right = (
-            xb[jnp.arange(n), samp_feat] > best_bin[local]
+            xb[samp_ids, samp_feat] > best_bin[local]
         ).astype(jnp.int32)
         assignment = 2 * assignment + go_right
 
@@ -225,6 +227,8 @@ def fit_forest_binned(
     split_feature = jnp.full((t, max_nodes), -1, jnp.int32)
     split_bin = jnp.full((t, max_nodes), n_bins, jnp.int32)
     assignment = jnp.ones((t, n), jnp.int32)  # heap id per (tree, sample)
+    tree_ids = jnp.arange(t)  # loop-invariant scatter rows
+    feat_ids = jnp.arange(f)
 
     for level in range(depth):
         nodes_at = 2**level
@@ -241,8 +245,8 @@ def fit_forest_binned(
             flat_idx = local[:, :, None] * n_bins + xb  # (T, N, F)
             hist = jnp.zeros((t, f, nodes_at * n_bins, n_classes), jnp.float32)
             hist = hist.at[
-                jnp.arange(t)[:, None, None],
-                jnp.arange(f)[None, None, :],
+                tree_ids[:, None, None],
+                feat_ids[None, None, :],
                 flat_idx,
                 y[None, :, None],
             ].add(w[:, :, None])

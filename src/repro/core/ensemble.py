@@ -45,7 +45,6 @@ class DistributedEnsemble:
     # --- training: map = fit a member per shard; reduce = union ------------
     def fit(self, mesh: Mesh, rng: jax.Array, x: jax.Array, y: jax.Array):
         axis = self.axis_name
-        n_shards = mesh.shape[axis]
 
         def job(x_s, y_s):
             member = jnp.sum(

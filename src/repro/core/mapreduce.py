@@ -24,7 +24,6 @@ Hadoop places on combiners); we provide the common ones.
 
 from __future__ import annotations
 
-import functools
 import inspect
 from typing import Any, Callable
 
@@ -87,13 +86,6 @@ def reduce_concat(mapped, axis_name: str):
         return g.reshape((-1,) + g.shape[2:]) if g.ndim >= 2 else g.reshape(-1)
 
     return jax.tree.map(cat, mapped)
-
-
-def reduce_vote(mapped, axis_name: str):
-    """Majority-vote reduce over per-shard class probabilities (..., C):
-    sums the probability mass -- argmax downstream gives the plurality
-    vote, the paper's ensemble decision rule."""
-    return jax.tree.map(lambda t: jax.lax.psum(t, axis_name), mapped)
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +226,5 @@ __all__ = [
     "reduce_mean",
     "reduce_max",
     "reduce_concat",
-    "reduce_vote",
     "shuffle_by_key",
 ]

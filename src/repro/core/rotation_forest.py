@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import decision_tree as dt
-from repro.core import pca
 from repro.kernels.forest import ops as forest_ops
 
 

@@ -12,7 +12,6 @@ log-decay ld: (BH, L), h_in: (BH, Dk, Dv).
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -25,7 +25,6 @@ module re-derives the three roofline terms directly from
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Iterable
 

@@ -17,7 +17,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt

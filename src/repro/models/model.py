@@ -156,7 +156,6 @@ class Model:
             return x
         from jax.sharding import NamedSharding, PartitionSpec as P
         tp = self.act_mesh.shape.get("model", 1)
-        b_ok = True
         total = 1
         for ax in self.act_axes:
             total *= self.act_mesh.shape[ax]

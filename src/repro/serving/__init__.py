@@ -1,3 +1,21 @@
+"""Serving surface.
+
+The supported serving stack is the session-oriented seizure engine
+(``repro.serving.api``): ``SeizureEngine`` + ``StreamSession`` and their
+event types. It is imported eagerly and is what examples, launch configs
+and the benchmarks drive.
+
+QUARANTINED (dormant, import on demand): the generic LM-decode stack --
+``engine.ServeEngine``/``make_serve_step`` and
+``continuous.ContinuousEngine``/``Request`` -- predates the seizure
+engine and is not on the paper's serving path. It stays importable
+(its tests, ``examples/serving_*.py`` and ``bench_serving`` still
+exercise it, and the PR 7 ``unreferenced-export`` lint tracks that this
+remains true) but is loaded lazily so the hot package import pulls in
+only the supported stack. Promote it back above this line or delete it
+outright once the ROADMAP multi-host serving item lands.
+"""
+
 from repro.serving.api import (
     AlarmCleared,
     AlarmRaised,
@@ -6,19 +24,35 @@ from repro.serving.api import (
     SeizureEngine,
     StreamSession,
 )
-from repro.serving.continuous import ContinuousEngine, Request
-from repro.serving.engine import ServeEngine, make_serve_step
+
+_QUARANTINED = {
+    "ServeEngine": ("repro.serving.engine", "ServeEngine"),
+    "make_serve_step": ("repro.serving.engine", "make_serve_step"),
+    "ContinuousEngine": ("repro.serving.continuous", "ContinuousEngine"),
+    "Request": ("repro.serving.continuous", "Request"),
+}
+
+
+def __getattr__(name: str):
+    target = _QUARANTINED.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(target[0]), target[1])
+
 
 __all__ = [
-    "ServeEngine",
-    "make_serve_step",
-    "ContinuousEngine",
-    "Request",
-    # session-oriented seizure serving (the public surface)
+    # session-oriented seizure serving (the supported surface)
     "ScoringProgram",
     "SeizureEngine",
     "StreamSession",
     "ChunkScored",
     "AlarmRaised",
     "AlarmCleared",
+    # quarantined LM-decode stack (lazy; see module docstring)
+    "ServeEngine",
+    "make_serve_step",
+    "ContinuousEngine",
+    "Request",
 ]

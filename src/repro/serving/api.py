@@ -245,8 +245,7 @@ def _score_chunks(chunks, packed, feat_mean, feat_std, *, cfg, use_pallas):
 
     The fused map phase: denoise each chunk matrix (the shared
     ``frontend.chunk_features`` entry point), then the shared
-    ``_vote_chunks`` voting block. One XLA program; ``chunks`` is
-    donated by callers.
+    ``_vote_chunks`` voting block. One XLA program.
     """
     feats = jax.vmap(lambda m: frontend.chunk_features(m, cfg))(chunks)
     return _vote_chunks(
@@ -306,12 +305,17 @@ def _engine_step(state, chunks, active, packed, feat_mean, feat_std,
 
 
 # One shared jit cache across engine instances (cfg/use_pallas static).
+# Only the state (arg 0) is donated: every EngineState leaf aliases the
+# matching output leaf 1:1, so the donation survives lowering (checked
+# by repro.analysis `donation-surviving`). The chunk batch used to be
+# donated too, but no output shares its shape/dtype, so XLA silently
+# dropped that donation at lowering -- declaring it bought nothing.
 _jit_engine_step = functools.partial(
-    jax.jit, static_argnames=("cfg", "use_pallas"), donate_argnums=(0, 1)
+    jax.jit, static_argnames=("cfg", "use_pallas"), donate_argnums=(0,)
 )(_engine_step)
 
 _jit_score_chunks = functools.partial(
-    jax.jit, static_argnames=("cfg", "use_pallas"), donate_argnums=(0,)
+    jax.jit, static_argnames=("cfg", "use_pallas")
 )(_score_chunks)
 
 
@@ -529,13 +533,12 @@ class SeizureEngine:
             statics = dict(cfg=program.cfg, use_pallas=use_forest_kernel)
             jit_step = jax.jit(
                 functools.partial(_engine_step, **statics),
-                donate_argnums=(0, 1),
+                donate_argnums=(0,),
                 in_shardings=(state_sh, data, data, repl, repl, repl),
                 out_shardings=(state_sh, data, data, data, data),
             )
             jit_score = jax.jit(
                 functools.partial(_score_chunks, **statics),
-                donate_argnums=(0,),
                 in_shardings=(data, repl, repl, repl),
                 out_shardings=(data, data, data),
             )
@@ -606,42 +609,53 @@ class SeizureEngine:
 
     def _sync_frontend(self, slot: int, session: StreamSession) -> None:
         """Pull the slot's device frontend context into the session."""
+        # device_get the whole leaves, then index on the host: slicing a
+        # device array with a host int rides jax's cached-gather path,
+        # which ships the index device-side as an implicit transfer (a
+        # transfer_guard violation). Eviction/sync are rare lifecycle
+        # events and the state is small, so the full pull is cheap.
         boundary, phase = jax.device_get((
-            self._state.fe_boundary[slot], self._state.fe_phase[slot]
+            self._state.fe_boundary, self._state.fe_phase
         ))
-        session.fe_boundary = np.asarray(boundary)
-        session.fe_phase = int(phase)
+        session.fe_boundary = np.asarray(boundary[slot])
+        session.fe_phase = int(phase[slot])
 
     def _evict(self, slot: int) -> None:
         """Pull the slot's device stream state back into the session."""
         session = self._slots[slot]
+        # One host sync of the full (small) state, indexed on the host --
+        # see _sync_frontend for why device-side int indexing is out.
         ring, pos, alarm, boundary, phase = jax.device_get((
-            # one host sync, not five
-            self._state.rings[slot],
-            self._state.ring_pos[slot],
-            self._state.alarm[slot],
-            self._state.fe_boundary[slot],
-            self._state.fe_phase[slot],
+            self._state.rings,
+            self._state.ring_pos,
+            self._state.alarm,
+            self._state.fe_boundary,
+            self._state.fe_phase,
         ))
-        session.ring = np.asarray(ring)
-        session.ring_pos = int(pos)
-        session.alarm = int(alarm)
-        session.fe_boundary = np.asarray(boundary)
-        session.fe_phase = int(phase)
+        session.ring = np.asarray(ring[slot])
+        session.ring_pos = int(pos[slot])
+        session.alarm = int(alarm[slot])
+        session.fe_boundary = np.asarray(boundary[slot])
+        session.fe_phase = int(phase[slot])
         session.slot = None
         self._slots[slot] = None
 
     def _admit(self, slot: int, session: StreamSession) -> None:
         """Splice the session's saved stream state (alarm ring + frontend
         context) into the slot's device state."""
+        # Explicit host->device handoff (jax.device_put, not jnp.asarray):
+        # the engine/frontend suites run these paths under
+        # jax.transfer_guard("disallow"), which turns any IMPLICIT
+        # transfer into an error -- every intentional crossing is spelled
+        # out (tests/conftest.py `device_transfer_sanitizer`).
         self._state = self._splice(
             self._state,
-            jnp.asarray(slot, jnp.int32),
-            jnp.asarray(session.ring, jnp.int32),
-            jnp.asarray(session.ring_pos, jnp.int32),
-            jnp.asarray(session.alarm, jnp.int32),
-            jnp.asarray(session.fe_boundary, jnp.float32),
-            jnp.asarray(session.fe_phase, jnp.int32),
+            jax.device_put(np.int32(slot)),
+            jax.device_put(np.asarray(session.ring, np.int32)),
+            jax.device_put(np.int32(session.ring_pos)),
+            jax.device_put(np.int32(session.alarm)),
+            jax.device_put(np.asarray(session.fe_boundary, np.float32)),
+            jax.device_put(np.int32(session.fe_phase)),
         )
         session.slot = slot
         session.queued = False
@@ -725,8 +739,10 @@ class SeizureEngine:
                 mask[i, j] = 1
             popped[i] = take
         program = self.program
+        # device_put, not jnp.asarray: the batch crossing is an EXPLICIT
+        # transfer, legal under jax.transfer_guard("disallow").
         self._state, votes, frac, alarm, preds = self._step(
-            self._state, jnp.asarray(batch), jnp.asarray(mask),
+            self._state, jax.device_put(batch), jax.device_put(mask),
             program.packed, program.feat_mean, program.feat_std,
             cfg=program.cfg, use_pallas=self.use_forest_kernel,
         )
@@ -759,11 +775,14 @@ class SeizureEngine:
     def score_chunks(self, chunks) -> tuple[jax.Array, jax.Array, jax.Array]:
         """Stateless raw step: an already-assembled (B, W, C, N) batch ->
         (votes (B,), preictal_frac (B,), window_preds (B, W)) WITHOUT
-        touching any session's alarm ring. The batch is donated -- pass a
-        fresh array. (This is the PR-1 ``score_batch`` contract.)"""
+        touching any session's alarm ring. (This is the PR-1
+        ``score_batch`` contract.) A host batch crosses to the device via
+        an explicit ``jax.device_put``; a device-resident batch passes
+        through untouched, so the whole call is transfer-free under
+        ``jax.transfer_guard("disallow")``."""
         program = self.program
         return self._score(
-            jnp.asarray(chunks), program.packed,
+            jax.device_put(chunks), program.packed,
             program.feat_mean, program.feat_std,
             cfg=program.cfg, use_pallas=self.use_forest_kernel,
         )

@@ -24,7 +24,7 @@ from typing import Any
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, InputShape
+from repro.configs.base import ArchConfig
 
 # parameter-name -> (row_logical, col_logical) for the trailing two dims;
 # 1-D params are replicated unless listed in _VEC rules.

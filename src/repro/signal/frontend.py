@@ -271,5 +271,11 @@ class StreamingFrontend:
             n_ready, per, *self._buf.shape[1:]
         )
         self._buf = self._buf[n_ready * per :]
-        self.state, feats = scan_stream(self.state, jnp.asarray(ready), self.cfg)
-        return np.asarray(feats).reshape(n_ready * per, -1)
+        # Explicit transfers both ways (device_put in, device_get out):
+        # the streaming suites run feed() under
+        # jax.transfer_guard("disallow"), so any implicit crossing on
+        # this path is a test failure, not a silent host sync.
+        self.state, feats = scan_stream(
+            self.state, jax.device_put(ready), self.cfg
+        )
+        return np.asarray(jax.device_get(feats)).reshape(n_ready * per, -1)

@@ -153,14 +153,18 @@ def denoise_stream_chunked(
             f"stream of {stream.shape[0]} windows is not {per}-aligned"
         )
     chunks = stream.reshape(k, per, *stream.shape[1:])
-    outs, halo = [], None
+    outs = []
+    # Zero halo for the first chunk, hoisted out of the loop (one device
+    # constant for the whole stream, not one per chunk).
+    halo = (
+        jnp.zeros((overlap, *stream.shape[1:]), jnp.float32)
+        if overlap else None
+    )
     for i in range(k):
         c = chunks[i]
         if overlap:
-            hl = (jnp.zeros((overlap, *stream.shape[1:]), jnp.float32)
-                  if halo is None else halo)
             outs.append(denoise_windows(
-                c, level=level, wavelet_name=wavelet_name, halo=hl
+                c, level=level, wavelet_name=wavelet_name, halo=halo
             ))
             halo = c[per - overlap :].astype(jnp.float32)
         else:

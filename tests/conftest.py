@@ -145,3 +145,50 @@ def chunk_pool(timeline):
     n = wins.shape[0] // PER
     chunks = wins[: n * PER].reshape(n, PER, *wins.shape[1:])
     return chunks[0], chunks[-1]
+
+
+# ---------------------------------------------------------------------------
+# Device-transfer sanitizer (repro.analysis.sanitizers). For the
+# streaming suites, every hot serving/frontend method runs under
+# jax.transfer_guard("disallow"): the explicit jax.device_put /
+# device_get calls those paths make are the ONLY legal host<->device
+# crossings, so an accidental np.asarray coercion or implicit transfer
+# creeping back into the loop fails the suite instead of silently
+# syncing per step. Applied autouse to exactly the modules that exercise
+# the hot loop -- other suites legitimately move test data across the
+# boundary and are left unguarded.
+# ---------------------------------------------------------------------------
+
+_TRANSFER_GUARDED_SUITES = {
+    "tests.test_seizure_engine",
+    "tests.test_engine_properties",
+    "tests.test_frontend",
+    "tests.test_overlap_mspca",
+    "test_seizure_engine",
+    "test_engine_properties",
+    "test_frontend",
+    "test_overlap_mspca",
+}
+
+
+@pytest.fixture(autouse=True)
+def device_transfer_sanitizer(request):
+    if request.module.__name__ not in _TRANSFER_GUARDED_SUITES:
+        yield
+        return
+    from repro.analysis.sanitizers import guard_methods
+    from repro.signal import frontend
+
+    with guard_methods(
+        api.SeizureEngine,
+        "_step_once", "_admit", "_evict", "_sync_frontend", "score_chunks",
+    ), guard_methods(frontend.StreamingFrontend, "feed"):
+        yield
+
+
+@pytest.fixture(scope="session")
+def recompile_budgets():
+    """The pinned compile-count budgets (repro/analysis/budgets.json)."""
+    from repro.analysis import load_budgets
+
+    return load_budgets()

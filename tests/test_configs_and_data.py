@@ -4,8 +4,6 @@ smoke limits, and the data pipeline is deterministic and shaped right."""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -62,8 +62,6 @@ def test_model_flops_scaling():
 
 
 def test_auto_microbatches_monotone():
-    mesh = make_host_mesh(1, 1)
-
     class FakeMesh:
         axis_names = ("data", "model")
         shape = {"data": 16, "model": 16}
