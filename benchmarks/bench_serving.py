@@ -29,6 +29,11 @@ Three workloads:
     for batching density. Identical math either way (events are
     byte-identical; tests/test_frontend.py), so the delta is pure
     sequential-dispatch overhead.
+  * ``replay megabatch`` -- the heavy-chunk twin of ``replay``: full
+    60-window chunks, MSPCA denoise ON, four backlogged sessions. The
+    (B, D)-batched megabatch engine step (the default) vs the
+    pre-megabatch path (serial per-chunk scan + scatter-add synthesis),
+    byte-identical events. This is the CI-gated catch-up throughput row.
 
   PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json F]
 """
@@ -271,11 +276,73 @@ def run_seizure_replay(rows: Rows, smoke: bool = False) -> None:
              "chunk-per-step time / scanned-replay time (>=1 = scan wins)")
 
 
+def run_seizure_replay_megabatch(rows: Rows, smoke: bool = False) -> None:
+    """Denoise-ON heavy catch-up: megabatch step vs the pre-megabatch path.
+
+    The light ``replay`` workload above isolates dispatch overhead; THIS
+    one measures the real production catch-up shape -- full 60-window
+    chunks with MSPCA denoise on, several backlogged sessions at once.
+    The baseline leg preserves the historical scoring path END TO END:
+    the per-chunk serial ``lax.scan`` (``megabatch=False``) over the
+    pre-megabatch scoring math (``reference_kernels=True``: gather +
+    matmul wavelet analysis, scatter-add synthesis, full-width masked
+    sample-major PCA reconstruction -- what every release before the
+    megabatch shipped). The megabatch leg is the engine default: the
+    (B*D)-flattened heavy stage over the pad + static-slice polyphase
+    wavelet kernels and the sliced variable-major PCA. Events are
+    byte-identical across the two engine steps at equal cfg
+    (tests/test_megabatch_replay.py); the kernel forms differ only in
+    float32 summation order. See the README speedup table for the
+    honest decomposition: on the single-core CPU smoke runner most of
+    the win is the kernel reformulations (the batching itself is
+    roughly neutral there and pays off on parallel backends).
+    """
+    _, cfg, program = _fitted_program(smoke)
+    serial_program = dataclasses.replace(
+        program, cfg=cfg._replace(reference_kernels=True)
+    )
+    n_sessions = 4
+    depth = 4
+    backlog = depth  # chunks per session: one full-depth step per slot
+    per = eeg_data.WINDOWS_PER_MATRIX
+    reps = 1 if smoke else 3
+    stream = np.asarray(eeg_data.generate_windows(
+        jax.random.PRNGKey(5), jnp.asarray(3), eeg_data.INTERICTAL,
+        backlog * per,
+    ))
+    n_rows_scored = n_sessions * backlog * per
+
+    def catchup(prog, megabatch):
+        def bench():
+            engine = SeizureEngine(
+                prog, max_batch=n_sessions, replay_depth=depth,
+                megabatch=megabatch,
+            )
+            for pid in range(n_sessions):
+                engine.open_session(pid).push(stream)
+            engine.poll()
+            return engine.steps
+        return bench
+
+    t_serial = time_fn(catchup(serial_program, False), iters=reps) / 1e6
+    t_mega = time_fn(catchup(program, True), iters=reps) / 1e6
+    rows.add("serving/replay_megabatch_rows_per_s", n_rows_scored / t_mega,
+             f"{n_sessions} sessions x {backlog} denoised chunks, "
+             f"one depth-{depth} megabatch step each")
+    rows.add("serving/seizure/replay_serial_scan_rows_per_s",
+             n_rows_scored / t_serial,
+             "same backlog through the pre-megabatch path "
+             "(serial scan + reference kernels)")
+    rows.add("serving/seizure/replay_megabatch_speedup", t_serial / t_mega,
+             "serial-scan time / megabatch time (>=1 = megabatch wins)")
+
+
 def run(rows: Rows, arch: str = "qwen3-0.6b", smoke: bool = False) -> None:
     run_lm(rows, arch=arch, smoke=smoke)
     run_seizure(rows, smoke=smoke)
     run_seizure_staggered(rows, smoke=smoke)
     run_seizure_replay(rows, smoke=smoke)
+    run_seizure_replay_megabatch(rows, smoke=smoke)
 
 
 if __name__ == "__main__":

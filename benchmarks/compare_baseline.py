@@ -26,10 +26,13 @@ import sys
 # Gate the fused serving row (absolute windows/s -- refresh the baseline
 # when runner hardware changes) plus its hardware-independent fused/
 # unfused ratio, the training-side twin (the fused-grower training
-# throughput), and the backlog-replay row (the scanned engine step's
+# throughput), the backlog-replay row (the scanned engine step's
 # single-patient catch-up rate; its speedup-vs-depth-1 companion is
 # recorded but, like the other scheduling ratios, swings too much
-# run-to-run to gate at 30%). The speedup-vs-loop/vmap and shard-scaling
+# run-to-run to gate at 30%), and the megabatch replay row (denoise-ON
+# heavy catch-up through the (B, D)-batched engine step -- the PR-8
+# headline; its serial-scan companion and speedup ratio are recorded
+# alongside for the decomposition). The speedup-vs-loop/vmap and shard-scaling
 # training rows are recorded for the trajectory but hover near 1.0 on
 # CPU (XLA batches the vmapped scatters). The two mspca/seam rows are
 # the overlap-aware-denoise accuracy gate: fixed keys + deterministic
@@ -46,6 +49,7 @@ DEFAULT_ROWS = [
     "serving/seizure/fused_speedup",
     "training/forest/fused_rows_per_s",
     "serving/replay_rows_per_s",
+    "serving/replay_megabatch_rows_per_s",
     "mspca/seam/worst_snr_db/overlap0",
     "mspca/seam/worst_snr_db/overlap2",
 ]

@@ -149,6 +149,18 @@ def _serving_entries():
                     "vote + alarm rings, one jitted program",
     )
     yield EntrySpec(
+        name="serving.engine_step_megabatch",
+        fn=api._jit_engine_step_megabatch,
+        args=(state, _sds((B, D, w, c, n)), _sds((B, D), jnp.int32),
+              packed, mean, std),
+        static_kwargs=statics,
+        donate_argnums=(0,),
+        must_alias=(0,),
+        carry=(0, 0),
+        description="megabatch engine step (engine default): (B*D) "
+                    "batched denoise+WPD+vote, thin alarm-ring scan",
+    )
+    yield EntrySpec(
         name="serving.score_chunks",
         fn=api._jit_score_chunks,
         args=(_sds((B, w, c, n)), packed, mean, std),

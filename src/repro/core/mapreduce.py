@@ -153,7 +153,7 @@ class MapReduce:
 
 def _local_reduce(reduce_fn: ReduceFn, mapped):
     """Interpret the standard reducers over a materialized shard axis."""
-    if reduce_fn in (reduce_sum, reduce_vote):
+    if reduce_fn is reduce_sum:
         return jax.tree.map(lambda t: jnp.sum(t, axis=0), mapped)
     if reduce_fn is reduce_mean:
         return jax.tree.map(lambda t: jnp.mean(t, axis=0), mapped)

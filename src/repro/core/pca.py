@@ -45,6 +45,20 @@ def _sym_cov(xc: jax.Array, use_kernel: bool = False) -> jax.Array:
     return g / jnp.maximum(n - 1, 1)
 
 
+def _eig_sorted(cov: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Descending-eigenvalue eigendecomposition with the framework's
+    deterministic sign convention (largest-|.| entry of each component
+    positive, so fits are reproducible across backends)."""
+    # eigh returns ascending eigenvalues; flip to descending.
+    evals, evecs = jnp.linalg.eigh(cov)
+    order = jnp.argsort(-evals)
+    evals = jnp.take(evals, order)
+    evecs = jnp.take(evecs, order, axis=1)
+    signs = jnp.sign(evecs[jnp.argmax(jnp.abs(evecs), axis=0), jnp.arange(evecs.shape[1])])
+    evecs = evecs * jnp.where(signs == 0, 1.0, signs)[None, :]
+    return evals, evecs
+
+
 def fit(x: jax.Array, use_kernel: bool = False) -> PCAState:
     """Fit PCA on ``x`` of shape (N, F). All components are kept --
     Rotation Forest requires the full rotation (Sec. 2.3.1: "All principal
@@ -54,15 +68,24 @@ def fit(x: jax.Array, use_kernel: bool = False) -> PCAState:
     mean = jnp.mean(x, axis=0)
     xc = x - mean
     cov = _sym_cov(xc, use_kernel=use_kernel)
-    # eigh returns ascending eigenvalues; flip to descending.
-    evals, evecs = jnp.linalg.eigh(cov)
-    order = jnp.argsort(-evals)
-    evals = jnp.take(evals, order)
-    evecs = jnp.take(evecs, order, axis=1)
-    # Sign convention: make the largest-|.| entry of each component positive
-    # so fits are deterministic across backends.
-    signs = jnp.sign(evecs[jnp.argmax(jnp.abs(evecs), axis=0), jnp.arange(evecs.shape[1])])
-    evecs = evecs * jnp.where(signs == 0, 1.0, signs)[None, :]
+    evals, evecs = _eig_sorted(cov)
+    return PCAState(components=evecs, mean=mean, variances=jnp.maximum(evals, 0.0))
+
+
+def fit_T(xT: jax.Array) -> PCAState:
+    """Fit PCA on ``xT`` of shape (F, N) -- the TRANSPOSED layout, where
+    columns are samples. Same result as ``fit(xT.T)`` up to float32
+    reduction order, without materializing the transpose: MSPCA's
+    per-scale loop holds wavelet coefficients variable-major, so
+    fitting in that layout skips two full-matrix transposes per scale
+    (a measurable share of the denoise stage on CPU)."""
+    xT = xT.astype(jnp.float32)
+    mean = jnp.mean(xT, axis=1)
+    xc = xT - mean[:, None]
+    cov = jnp.einsum(
+        "pn,qn->pq", xc, xc, preferred_element_type=jnp.float32
+    ) / jnp.maximum(xT.shape[1] - 1, 1)
+    evals, evecs = _eig_sorted(cov)
     return PCAState(components=evecs, mean=mean, variances=jnp.maximum(evals, 0.0))
 
 
@@ -76,16 +99,50 @@ def inverse_transform(state: PCAState, scores: jax.Array) -> jax.Array:
     return scores @ state.components[:, :k].T + state.mean
 
 
-def reconstruct(state: PCAState, x: jax.Array, keep: jax.Array | int) -> jax.Array:
+def reconstruct(
+    state: PCAState,
+    x: jax.Array,
+    keep: jax.Array | int,
+    *,
+    masked: bool | None = None,
+) -> jax.Array:
     """Project onto the leading components and back (used by MSPCA).
 
-    ``keep`` may be a traced integer -- we mask components instead of
-    slicing so the function stays jittable with a dynamic component count.
+    ``keep`` may be a traced integer -- components are then MASKED
+    instead of sliced so the function stays jittable with a dynamic
+    component count. A static Python int ``keep`` takes the sliced
+    fast path instead: both GEMMs shrink from (N, F) @ (F, F) to
+    (N, F) @ (F, k), which only drops terms the mask zeroed exactly
+    (equal up to float32 summation grouping). ``masked=True`` forces
+    the historical full-width masked form -- the pre-megabatch
+    formulation, pinned by the serving bench's serial-replay leg.
     """
+    if masked is None:
+        masked = not isinstance(keep, int)
+    if not masked:
+        comps = state.components[:, : min(int(keep), state.components.shape[1])]
+        scores = (x - state.mean) @ comps  # (N, k)
+        return scores @ comps.T + state.mean
     scores = (x - state.mean) @ state.components  # (N, F)
     f = state.components.shape[1]
     mask = (jnp.arange(f) < keep).astype(scores.dtype)
     return (scores * mask) @ state.components.T + state.mean
+
+
+def reconstruct_T(
+    state: PCAState, xT: jax.Array, keep: jax.Array | int
+) -> jax.Array:
+    """Transposed-layout ``reconstruct``: (F, N) -> (F, N), columns are
+    samples (pairs with ``fit_T``). A static Python int ``keep`` takes
+    the sliced fast path; a traced count masks the score rows instead.
+    """
+    xc = xT - state.mean[:, None]
+    if isinstance(keep, int):
+        comps = state.components[:, : min(keep, state.components.shape[1])]
+        return comps @ (comps.T @ xc) + state.mean[:, None]
+    scores = state.components.T @ xc  # (F, N)
+    mask = (jnp.arange(scores.shape[0]) < keep).astype(scores.dtype)
+    return state.components @ (scores * mask[:, None]) + state.mean[:, None]
 
 
 def n_components_for_variance(state: PCAState, frac: float = 0.95) -> jax.Array:

@@ -21,17 +21,19 @@ EEG streams at once, with the k-of-m alarm rule evaluated on-device.
     events: ``ChunkScored``, ``AlarmRaised``, ``AlarmCleared``.
 
 Division of labor: the device step scores a (B, D, W, C, N) batch of up
-to ``replay_depth`` backlogged chunks per slot in ONE jitted program --
-an on-device ``lax.scan`` over the backlog axis whose body runs the
-streaming front-end transition (``signal.frontend.frontend_step``:
-MSPCA denoise -> WPD features), the packed forest vote, the chunk vote,
-AND the k-of-m alarm-ring advance. The sequential dependency (ring +
-frontend state) lives inside the scan, so a single-patient catch-up
-scores its whole backlog per dispatch instead of one chunk per engine
-step. The host schedules sessions into slots, splices evicted/admitted
-rings + frontend context, enforces the optional latency budget
-(deadline-based partial flush), and turns the (B, D) readbacks into
-per-chunk events.
+to ``replay_depth`` backlogged chunks per slot in ONE jitted program,
+as a two-stage MEGABATCH step: (1) the heavy map phase -- MSPCA
+denoise -> WPD features (``signal.frontend.megabatch_step``, every
+chunk's halo assembled from its predecessor in the backlog buffer
+itself) and the packed forest vote -- runs batched over the flattened
+(B*D) chunk axis; (2) only the O(m) k-of-m alarm-ring advance stays a
+``lax.scan`` over the precomputed (B, D) votes. A single-patient
+catch-up therefore costs one batched dispatch, not D sequential
+denoise+WPD+forest passes (the serial scan survives as the oracle path
+behind ``SeizureEngine(megabatch=False)``). The host schedules
+sessions into slots, splices evicted/admitted rings + frontend
+context, enforces the optional latency budget (deadline-based partial
+flush), and turns the (B, D) readbacks into per-chunk events.
 """
 
 from __future__ import annotations
@@ -266,8 +268,14 @@ def _engine_step(state, chunks, active, packed, feat_mean, feat_std,
     everything is per-slot independent across the batch axis, so the
     state advances shardable along ``data``. Returns per-chunk
     (B, D)-shaped votes/fracs/alarms and (B, D, W) window preds.
+
+    This is the SERIAL ORACLE: the megabatch step
+    (``_engine_step_megabatch``, the engine default) must emit
+    byte-identical events; keep this scan as the reference the equality
+    suite (tests/test_megabatch_replay.py) pins it against.
     """
     b, m = state.rings.shape
+    rows = jnp.arange(b)  # loop-invariant: hoisted out of the scan body
 
     def body(st, inp):
         ch, act = inp  # (B, W, C, N), (B,)
@@ -278,7 +286,7 @@ def _engine_step(state, chunks, active, packed, feat_mean, feat_std,
             feats, packed, feat_mean, feat_std, use_pallas=use_pallas
         )
         votes = votes * act
-        written = st.rings.at[jnp.arange(b), st.ring_pos].set(votes)
+        written = st.rings.at[rows, st.ring_pos].set(votes)
         rings = jnp.where(act[:, None] > 0, written, st.rings)
         ring_pos = jnp.where(act > 0, (st.ring_pos + 1) % m, st.ring_pos)
         hits = jnp.sum(rings, axis=1)
@@ -304,6 +312,71 @@ def _engine_step(state, chunks, active, packed, feat_mean, feat_std,
     )
 
 
+def _engine_step_megabatch(state, chunks, active, packed, feat_mean,
+                           feat_std, *, cfg, use_pallas):
+    """The de-serialized engine step: same contract as ``_engine_step``
+    (byte-identical events), two stages instead of a D-deep heavy scan.
+
+    Stage 1 (batched heavy): ``frontend.megabatch_step`` assembles every
+    backlog chunk's denoise halo from its predecessor IN the (B, D)
+    buffer (only chunk 0 consumes the carried ``fe_boundary``; the
+    closed-form boundary/phase advance needs ``active`` to be prefix
+    masks, which is the only shape ``_step_once`` produces), then ONE
+    flattened (B*D) pass runs denoise + WPD + the forest vote -- the
+    paper's embarrassingly parallel map phase, restored: a depth-D
+    catch-up costs one batched dispatch, not D sequential passes.
+
+    Stage 2 (thin sequential): the ``lax.scan`` survives only as the
+    O(m)-per-step masked alarm-ring advance over the precomputed (B, D)
+    votes -- the one genuine sequential dependency.
+
+    Outputs for INACTIVE (padding) positions: votes are masked to 0 and
+    the alarm sequence carries the slot's running alarm either way --
+    both bit-identical to the serial scan. ``frac``/``preds`` of padding
+    positions are computed from whatever stale windows sit in the buffer
+    (the serial scan reuses the post-backlog state instead); the host
+    never reads them (``_step_once`` walks only the popped prefix).
+    """
+    b, m = state.rings.shape
+    d = chunks.shape[1]
+    active = active.astype(jnp.int32)
+    fe, feats = frontend.megabatch_step(
+        state.frontend_state(), chunks, active, cfg
+    )
+    w = feats.shape[2]
+    votes, frac, preds = _vote_chunks(
+        feats.reshape(b * d, w, -1), packed, feat_mean, feat_std,
+        use_pallas=use_pallas,
+    )
+    votes = votes.reshape(b, d) * active
+    frac = frac.reshape(b, d)
+    preds = preds.reshape(b, d, w)
+
+    rows = jnp.arange(b)  # loop-invariant: hoisted out of the ring scan
+
+    def ring_body(st, inp):
+        rings_, pos_, alarm_ = st
+        v, act = inp  # (B,), (B,)
+        written = rings_.at[rows, pos_].set(v)
+        rings = jnp.where(act[:, None] > 0, written, rings_)
+        pos = jnp.where(act > 0, (pos_ + 1) % m, pos_)
+        hits = jnp.sum(rings, axis=1)
+        alarm = jnp.where(
+            act > 0, (hits >= cfg.alarm_k).astype(jnp.int32), alarm_
+        )
+        return (rings, pos, alarm), alarm
+
+    (rings, ring_pos, alarm), alarm_seq = jax.lax.scan(
+        ring_body, (state.rings, state.ring_pos, state.alarm),
+        (votes.T, active.T),
+    )
+    new_state = EngineState(
+        rings=rings, ring_pos=ring_pos, alarm=alarm,
+        fe_boundary=fe.boundary, fe_phase=fe.phase,
+    )
+    return new_state, votes, frac, alarm_seq.T, preds
+
+
 # One shared jit cache across engine instances (cfg/use_pallas static).
 # Only the state (arg 0) is donated: every EngineState leaf aliases the
 # matching output leaf 1:1, so the donation survives lowering (checked
@@ -313,6 +386,10 @@ def _engine_step(state, chunks, active, packed, feat_mean, feat_std,
 _jit_engine_step = functools.partial(
     jax.jit, static_argnames=("cfg", "use_pallas"), donate_argnums=(0,)
 )(_engine_step)
+
+_jit_engine_step_megabatch = functools.partial(
+    jax.jit, static_argnames=("cfg", "use_pallas"), donate_argnums=(0,)
+)(_engine_step_megabatch)
 
 _jit_score_chunks = functools.partial(
     jax.jit, static_argnames=("cfg", "use_pallas")
@@ -442,14 +519,21 @@ class SeizureEngine:
     max_batch     : number of device slots (one compiled program per
                     backlog depth, ever).
     chunk_windows : windows per chunk (the paper's 60).
-    replay_depth  : max backlogged chunks ONE engine step scores per slot
-                    (the in-step ``lax.scan`` depth). 1 reproduces the
+    replay_depth  : backlogged chunks ONE engine step scores per slot
+                    (the megabatch D axis). 1 reproduces the
                     chunk-per-step schedule exactly; deeper replay gives
                     a backlogged session (e.g. single-patient catch-up
                     after an uplink outage) up to ``replay_depth`` chunks
-                    per dispatch with byte-identical events. Steps are
-                    bucketed to the deepest ready backlog, so shallow
-                    traffic never pays for unused depth.
+                    per dispatch with byte-identical events. Every step
+                    pads to this FIXED depth, so steady-state and replay
+                    traffic share one compiled program (engine recompile
+                    budget == 1, enforced by ``repro.analysis``).
+    megabatch     : True (default) runs ``_engine_step_megabatch`` --
+                    denoise+WPD+forest batched over the whole (B, D)
+                    backlog, only the alarm-ring advance sequential.
+                    False keeps the serial per-chunk ``lax.scan``
+                    (``_engine_step``): the oracle path the equality
+                    suite and the serving bench's baseline leg run.
     latency_budget_s : deadline for ``poll(drain=False)``: a partial
                     batch is flushed anyway once the OLDEST queued chunk
                     has waited longer than this many seconds (None keeps
@@ -483,6 +567,7 @@ class SeizureEngine:
         max_batch: int = 8,
         chunk_windows: int = eeg_data.WINDOWS_PER_MATRIX,
         replay_depth: int = 1,
+        megabatch: bool = True,
         latency_budget_s: float | None = None,
         mesh: Mesh | None = None,
         use_forest_kernel: bool = False,
@@ -494,6 +579,7 @@ class SeizureEngine:
         self.max_batch = max_batch
         self.chunk_windows = chunk_windows
         self.replay_depth = replay_depth
+        self.megabatch = megabatch
         self.latency_budget_s = latency_budget_s
         self.mesh = mesh
         self.use_forest_kernel = use_forest_kernel
@@ -511,8 +597,11 @@ class SeizureEngine:
             max_batch, self.alarm_m, overlap=program.cfg.overlap
         )
 
+        step_fn = _engine_step_megabatch if megabatch else _engine_step
         if mesh is None:
-            self._step = _jit_engine_step
+            self._step = (
+                _jit_engine_step_megabatch if megabatch else _jit_engine_step
+            )
             self._splice = _splice_state
             self._score = _jit_score_chunks
         else:
@@ -532,7 +621,7 @@ class SeizureEngine:
             # kwargs once in_shardings is given.
             statics = dict(cfg=program.cfg, use_pallas=use_forest_kernel)
             jit_step = jax.jit(
-                functools.partial(_engine_step, **statics),
+                functools.partial(step_fn, **statics),
                 donate_argnums=(0,),
                 in_shardings=(state_sh, data, data, repl, repl, repl),
                 out_shardings=(state_sh, data, data, data, data),
@@ -716,14 +805,9 @@ class SeizureEngine:
         return events
 
     def _step_once(self, active: list[int]) -> list:
-        # Bucket the replay depth to the deepest ready backlog: shallow
-        # traffic (the common steady-state, one chunk per slot) compiles
-        # and runs the depth-1 program; a catch-up burst uses a deeper
-        # bucket. At most ``replay_depth`` distinct compilations.
-        depth = min(
-            self.replay_depth,
-            max(len(self._slots[i].chunks) for i in active),
-        )
+        # Fixed D: every step pads the backlog axis to ``replay_depth``,
+        # so steady-state and replay traffic run ONE compiled program.
+        depth = self.replay_depth
         batch = np.zeros(
             (self.max_batch, depth, self.chunk_windows, eeg_data.N_CHANNELS,
              eeg_data.WINDOW),

@@ -34,19 +34,29 @@ def node_features(coeffs: jax.Array) -> jax.Array:
     return jnp.stack([mean_abs, power, std, skew, kurt, entropy], axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("level", "wavelet_name", "use_kernel"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("level", "wavelet_name", "use_kernel", "reference_kernels"),
+)
 def wpd_features(
     windows: jax.Array,
     level: int = 4,
     wavelet_name: str = "db4",
     use_kernel: bool = False,
+    reference_kernels: bool = False,
 ) -> jax.Array:
     """Windows (..., C, N) -> features (..., C * 2**level * 6).
 
     The per-window feature extraction of Sec. 2.6: WPD to ``level`` and
     six statistics per terminal node, flattened over channels and nodes.
+    ``reference_kernels=True`` runs the WPD through the pre-megabatch
+    gather + matmul analysis formulation (``wavelet.analysis_step``'s
+    ``reference`` path).
     """
-    nodes = wavelet.wpd(windows, level, wavelet_name, use_kernel=use_kernel)
+    nodes = wavelet.wpd(
+        windows, level, wavelet_name, use_kernel=use_kernel,
+        reference=reference_kernels,
+    )
     feats = node_features(nodes)  # (..., C, 2**level, 6)
     lead = windows.shape[:-2]
     return feats.reshape(lead + (-1,))

@@ -18,9 +18,13 @@ into an explicit streaming transition:
     per-scale PCA bases see cross-seam context instead of a hard edge
     at every chunk boundary.
   * ``scan_stream``    -- ``lax.scan`` of ``frontend_step`` over a
-    chunk-aligned stream. ``pipeline.process_windows`` is this scan;
-    the serving engine scans the same transition over each slot's
-    backlog INSIDE its jitted step (``serving.api``).
+    chunk-aligned stream. ``pipeline.process_windows`` is this scan.
+  * ``megabatch_step`` -- the de-serialized batch transition: D backlog
+    chunks per stream featurized in ONE flattened (B*D) heavy pass,
+    halos assembled from the backlog itself (chunk d's halo is chunk
+    d-1's raw tail; only chunk 0 consumes the carried boundary). The
+    serving engine's jitted step runs this instead of scanning
+    ``frontend_step`` (``serving.api``).
   * ``StreamingFrontend`` -- host-side incremental wrapper: feed raw
     windows in arbitrary split sizes, get feature rows back per
     completed chunk, bit-identical to the one-shot batch path.
@@ -161,18 +165,21 @@ def chunk_features(
                 lambda m, hl: mspca.denoise_windows(
                     m, level=cfg.mspca_level, wavelet_name=cfg.wavelet,
                     halo=hl,
+                    reference_kernels=cfg.reference_kernels,
                 )
             )(mats, halos)
         else:
             den = jax.vmap(
                 lambda m: mspca.denoise_windows(
-                    m, level=cfg.mspca_level, wavelet_name=cfg.wavelet
+                    m, level=cfg.mspca_level, wavelet_name=cfg.wavelet,
+                    reference_kernels=cfg.reference_kernels,
                 )
             )(mats)
         chunk_windows = den.reshape(n_mat * per, c, n)[:w]
     return features.wpd_features(
         chunk_windows, level=cfg.wpd_level, wavelet_name=cfg.wavelet,
         use_kernel=cfg.use_kernel,
+        reference_kernels=cfg.reference_kernels,
     )
 
 
@@ -203,6 +210,73 @@ def frontend_step(
         phase=state.phase + 1,
     )
     return new_state, feats
+
+
+def megabatch_step(
+    state: FrontendState, chunks: jax.Array, active: jax.Array, cfg
+) -> tuple[FrontendState, jax.Array]:
+    """Batched multi-chunk transition: D backlog chunks per stream at once.
+
+    The de-serialized form of scanning ``frontend_step`` D times: because
+    the denoise halo is RAW input (the previous chunk's tail), every
+    chunk's halo is already present in the backlog itself -- chunk d's
+    halo is the tail of chunk d-1, and only chunk 0 needs the carried
+    ``state.boundary``. So the heavy stage (denoise + WPD) runs ONCE over
+    the flattened (B*D) chunk batch with halos gathered from the
+    concatenated per-stream window sequence, no sequential dependency.
+
+    state  : (B,)-leading ``FrontendState`` (one per stream/slot).
+    chunks : (B, D, W, C, N) raw backlog windows, slot-major.
+    active : (B, D) int32/bool PREFIX masks -- active[b] must be
+             ``[1]*take + [0]*(D-take)``: real backlog chunks first,
+             then padding. (That is the only shape the engine's backlog
+             pop produces; the closed-form boundary/phase advance below
+             relies on it.)
+    Returns the advanced state -- boundary = the last ``bw`` raw windows
+    after consuming each stream's ``take = sum(active[b])`` chunks,
+    phase += take, exactly what ``take`` masked ``frontend_step``s leave
+    behind -- and (B, D, W, F) feature rows. Feature rows of ACTIVE
+    chunks are bit-identical to the serial scan (the halos are the same
+    float32 windows either way); rows of padding chunks are computed
+    with whatever stale halo precedes them in the buffer and must be
+    masked by the caller, where the serial scan would have reused the
+    post-``take`` state instead.
+    """
+    b, d, w, c, n = chunks.shape
+    bw = state.boundary.shape[1]
+    active = active.astype(jnp.int32)
+    # Per-stream raw window sequence: carried boundary, then the backlog
+    # in order. Chunk d starts at offset bw + d*w, so the bw windows
+    # before it -- its halo -- sit at [d*w, d*w + bw).
+    stream = jnp.concatenate(
+        [state.boundary, chunks.astype(jnp.float32).reshape(b, d * w, c, n)],
+        axis=1,
+    )  # (B, bw + D*W, C, N)
+    flat = chunks.reshape(b * d, w, c, n)
+    if cfg.overlap:
+        halo_idx = (
+            jnp.arange(d, dtype=jnp.int32)[:, None] * w
+            + jnp.arange(bw, dtype=jnp.int32)[None, :]
+        )  # (D, bw)
+        halos = stream[:, halo_idx].reshape(b * d, bw, c, n)
+        feats = jax.vmap(
+            lambda ch, hl: chunk_features(ch, cfg, halo=hl)
+        )(flat, halos)
+    else:
+        feats = jax.vmap(lambda ch: chunk_features(ch, cfg))(flat)
+    take = jnp.sum(active, axis=1)  # (B,)
+    # Last bw raw windows of (boundary ++ chunks[:take]) -- the window
+    # range [take*w, take*w + bw) of the concatenated stream. take == 0
+    # slices at offset 0: the old boundary, untouched.
+    new_boundary = jax.vmap(
+        lambda s, t: jax.lax.dynamic_slice(
+            s, (t * w, jnp.int32(0), jnp.int32(0)), (bw, c, n)
+        )
+    )(stream, take)
+    new_state = FrontendState(
+        boundary=new_boundary, phase=state.phase + take
+    )
+    return new_state, feats.reshape(b, d, w, -1)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

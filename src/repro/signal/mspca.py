@@ -27,27 +27,48 @@ from repro.core import pca
 from repro.signal import wavelet
 
 
-def _pca_reconstruct(mat: jax.Array, keep) -> jax.Array:
-    """PCA across columns; keep components; reconstruct.
+def _pca_reconstruct(mat: jax.Array, keep, reference: bool = False) -> jax.Array:
+    """PCA across columns of ``mat`` (N, P); keep components; reconstruct.
 
     ``keep``: "kaiser" (eigenvalue > mean -- Bakshi's rule; content-
     dependent) or an int (fixed count -- keeps the train/test transform
     comparable, which matters for downstream classification; see
-    EXPERIMENTS.md ablation)."""
+    EXPERIMENTS.md ablation). A fixed count takes
+    ``pca.reconstruct``'s sliced fast path; ``reference=True`` pins the
+    historical full-width masked form instead (the pre-megabatch
+    serial-replay leg of the serving bench)."""
     st = pca.fit(mat)
-    k = pca.kaiser_rule(st) if keep == "kaiser" else jnp.asarray(keep)
-    k = jnp.minimum(k, mat.shape[1])
-    return pca.reconstruct(st, mat, k)
+    if keep == "kaiser":
+        k = jnp.minimum(pca.kaiser_rule(st), mat.shape[1])
+        return pca.reconstruct(st, mat, k)
+    return pca.reconstruct(st, mat, int(keep), masked=reference)
 
 
-def _hard_threshold(d: jax.Array, sigma: jax.Array) -> jax.Array:
-    thr = sigma * jnp.sqrt(2.0 * jnp.log(jnp.asarray(d.shape[0], jnp.float32)))
+def _pca_reconstruct_T(cT: jax.Array, keep) -> jax.Array:
+    """Variable-major twin of ``_pca_reconstruct``: ``cT`` is (P, n) --
+    exactly the layout ``wavelet.dwt`` hands back per scale -- so the
+    fit and the projection run without the two full-matrix transposes
+    the sample-major form pays per scale."""
+    st = pca.fit_T(cT)
+    if keep == "kaiser":
+        k = jnp.minimum(pca.kaiser_rule(st), cT.shape[0])
+        return pca.reconstruct_T(st, cT, k)
+    return pca.reconstruct_T(st, cT, int(keep))
+
+
+def _hard_threshold(d: jax.Array, sigma: jax.Array, n: int) -> jax.Array:
+    """Universal threshold over ``n`` samples (layout-agnostic: ``d`` may
+    be sample-major or variable-major, the rule only needs ``n``)."""
+    thr = sigma * jnp.sqrt(2.0 * jnp.log(jnp.asarray(n, jnp.float32)))
     return jnp.where(jnp.abs(d) > thr, d, 0.0)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("level", "wavelet_name", "threshold", "keep", "final_pca"),
+    static_argnames=(
+        "level", "wavelet_name", "threshold", "keep", "final_pca",
+        "reference_kernels",
+    ),
 )
 def denoise(
     x: jax.Array,
@@ -56,6 +77,7 @@ def denoise(
     threshold: bool = False,
     keep: int | str = 30,
     final_pca: bool = False,
+    reference_kernels: bool = False,
 ) -> jax.Array:
     """MSPCA-denoise X (N, P) -> (N, P).
 
@@ -65,6 +87,14 @@ def denoise(
     (``threshold=True, keep="kaiser", final_pca=True``) denoises more
     aggressively but makes the reconstruction content-dependent, which
     hurts downstream train/test feature consistency.
+
+    ``reference_kernels=True`` runs the pre-megabatch scoring math end
+    to end: gather + matmul wavelet analysis, scatter-add synthesis
+    (``wavelet.synthesis_step_reference``), and the full-width masked
+    PCA reconstruction. The default pad + static-slice polyphase
+    kernels and sliced reconstruction are equal up to float32 summation
+    order; the serving bench's serial-replay leg pins the reference
+    path so the megabatch before/after stays measurable.
     """
     x = x.astype(jnp.float32)
     mean = jnp.mean(x, axis=0)
@@ -72,32 +102,43 @@ def denoise(
 
     # DWT along samples: transform each column. wavelet ops act on the last
     # axis, so work with (P, N).
-    coeffs = wavelet.dwt(xc.T, level, wavelet_name)  # list of (P, N/2^j)
+    coeffs = wavelet.dwt(
+        xc.T, level, wavelet_name, reference=reference_kernels
+    )  # list of (P, N/2^j)
 
     # Noise scale from the finest detail (median absolute deviation).
     d1 = coeffs[0]
     sigma = jnp.median(jnp.abs(d1)) / 0.6745
 
     new_coeffs = []
-    for j, c in enumerate(coeffs):
-        mat = c.T  # (n_j, P)
-        rec = _pca_reconstruct(mat, keep)
+    for j, c in enumerate(coeffs):  # c is (P, n_j), variable-major
+        if reference_kernels:
+            # Historical per-scale shape: transpose to (n_j, P), fit
+            # sample-major, full-width masked reconstruct, transpose back.
+            rec = _pca_reconstruct(c.T, keep, reference=True).T
+        else:
+            rec = _pca_reconstruct_T(c, keep)
         if threshold and j < len(coeffs) - 1:  # details only, not A_L
-            rec = _hard_threshold(rec, sigma)
-        new_coeffs.append(rec.T)
+            rec = _hard_threshold(rec, sigma, n=c.shape[1])
+        new_coeffs.append(rec)
 
-    xd = wavelet.idwt(new_coeffs, wavelet_name).T  # (N, P)
+    xd = wavelet.idwt(
+        new_coeffs, wavelet_name, reference=reference_kernels
+    ).T  # (N, P)
     if final_pca:  # Bakshi step 4
-        xd = _pca_reconstruct(xd, keep)
+        xd = _pca_reconstruct(xd, keep, reference=reference_kernels)
     return xd + mean
 
 
-@functools.partial(jax.jit, static_argnames=("level", "wavelet_name"))
+@functools.partial(
+    jax.jit, static_argnames=("level", "wavelet_name", "reference_kernels")
+)
 def denoise_windows(
     windows: jax.Array,
     level: int = 5,
     wavelet_name: str = "db4",
     halo: jax.Array | None = None,
+    reference_kernels: bool = False,
 ) -> jax.Array:
     """(W, C, N) raw windows -> (W, C, N) denoised: one 8-minute matrix.
 
@@ -123,12 +164,18 @@ def denoise_windows(
         halo = None
     if halo is None:
         mat = windows.transpose(2, 0, 1).reshape(n, w * c)
-        den = denoise(mat, level=level, wavelet_name=wavelet_name)
+        den = denoise(
+            mat, level=level, wavelet_name=wavelet_name,
+            reference_kernels=reference_kernels,
+        )
         return den.reshape(n, w, c).transpose(1, 2, 0)
     h = halo.shape[0]
     ext = jnp.concatenate([halo.astype(windows.dtype), windows])
     mat = ext.transpose(2, 0, 1).reshape(n, (h + w) * c)
-    den = denoise(mat, level=level, wavelet_name=wavelet_name)
+    den = denoise(
+        mat, level=level, wavelet_name=wavelet_name,
+        reference_kernels=reference_kernels,
+    )
     return den.reshape(n, h + w, c).transpose(1, 2, 0)[h:]
 
 

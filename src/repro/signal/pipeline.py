@@ -43,6 +43,14 @@ class PipelineConfig(NamedTuple):
     # 0 (default) = the paper's fully independent chunks, bit-identical
     # to the pre-overlap scoring path.
     overlap: int = 0
+    # Route the whole wavelet front-end (MSPCA analysis + synthesis and
+    # the WPD filterbank) through the pre-megabatch kernel formulations:
+    # gather + matmul analysis and scatter-add synthesis, instead of the
+    # roll-fused polyphase defaults. Equal up to float32 summation
+    # order; the reference path exists so the serving bench's
+    # serial-replay leg can measure the historical scoring path against
+    # the megabatch engine step (the PR-8 before/after).
+    reference_kernels: bool = False
 
 
 class FittedPipeline(NamedTuple):
@@ -75,6 +83,7 @@ def process_windows(windows: jax.Array, cfg: PipelineConfig) -> jax.Array:
         return features.wpd_features(
             windows, level=cfg.wpd_level, wavelet_name=cfg.wavelet,
             use_kernel=cfg.use_kernel,
+            reference_kernels=cfg.reference_kernels,
         )
     per = eeg_data.WINDOWS_PER_MATRIX
     n_mat = max(1, -(-w // per))
@@ -251,9 +260,10 @@ def evaluate_timeline(
     through a single-slot ``serving.SeizureEngine`` session, so the chunk
     votes and alarms here are BY CONSTRUCTION what the serving engine
     emits. The whole recording arrives as one backlog, so the engine
-    replays it through the in-step ``lax.scan`` (``replay_depth``
-    chunks per jitted dispatch -- the bulk-replay path; per-chunk events
-    are byte-identical to depth-1 scoring). Trailing windows that do not
+    replays it through the megabatch step (``replay_depth`` chunks per
+    jitted dispatch, denoise+WPD+forest batched over the whole backlog
+    with halos assembled in-batch; per-chunk events are byte-identical
+    to depth-1 scoring). Trailing windows that do not
     fill a chunk are scored for ``window_preds`` only (self-wrapped
     denoise context with a stream-start halo, exactly as
     ``chunk_predictions`` drops them from the chunk votes).

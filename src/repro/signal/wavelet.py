@@ -8,11 +8,26 @@ terminal coefficient sets at level k.
 Implementation notes (TPU adaptation, DESIGN.md Sec. 7):
   * Periodized orthogonal transform -- the analysis operator
     a[n] = sum_k h[k] x[(2n+k) mod N] has orthonormal rows, so synthesis
-    is exactly the transpose (scatter-add) and round-trips are exact.
-  * The decimating convolution is expressed as a gather + small matmul
-    (window matrix (N/2, L) times filter (L,)) rather than `conv`;
-    that is the layout the Pallas ``kernels/wpd`` kernel tiles for the
-    MXU, and this module is its reference implementation / fallback.
+    is exactly the transpose and round-trips are exact.
+  * Both directions ship in PAD + STATIC-SLICE POLYPHASE form: split
+    the signal (analysis) or interleave the output (synthesis) by
+    sample parity, circularly pad each phase ONCE by the L/2 - 1
+    samples the periodization can reach, then accumulate L/2 STATIC
+    slices of the padded buffer scaled by the filter taps. Static
+    slices (unlike rolls or gathers) fuse into XLA's elementwise
+    loops, so the whole level is one pass over the operands -- no
+    (N/2, L) window matrix is ever materialized. On the CPU smoke
+    runner this is ~4x over the gather formulation at MSPCA/WPD
+    shapes and is what makes the megabatch engine step pay off
+    (benchmarks/bench_serving.py).
+  * The historical formulations are KEPT, not just in tests: analysis
+    as an explicit gather + small matmul (window matrix (N/2, L) times
+    filter (L,), ``reference=True`` -- also the layout the Pallas
+    ``kernels/wpd`` kernel tiles for the MXU) and synthesis as the
+    longhand scatter-add transpose (``synthesis_step_reference``).
+    Together they are the pre-megabatch scoring kernels; the serving
+    bench's serial-replay leg (``PipelineConfig(reference_kernels=
+    True)``) measures that old path against the megabatch step.
 """
 
 from __future__ import annotations
@@ -60,18 +75,98 @@ def _window_indices(n: int, taps: int) -> jax.Array:
     return (base + offs) % n
 
 
-def analysis_step(x: jax.Array, wavelet: str = "db4") -> tuple[jax.Array, jax.Array]:
-    """One level (eqs. 2-3): x (..., N) -> (approx (..., N/2), detail (..., N/2))."""
+def analysis_step(
+    x: jax.Array, wavelet: str = "db4", *, reference: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """One level (eqs. 2-3): x (..., N) -> (approx (..., N/2), detail (..., N/2)).
+
+    Default is the pad + static-slice polyphase form: with x split by
+    parity into phases x_p[m] = x[2m + p], tap k = 2j + p of the
+    periodized operator reads x_p[(m + j) mod N/2]. Each phase is
+    circularly padded ONCE by the L/2 - 1 samples the wrap can reach;
+    every tap is then a STATIC slice of the padded buffer, and XLA
+    fuses the whole
+    slice-scale-accumulate into one elementwise loop -- no (N/2, L)
+    window gather, no per-tap copies. ~4x over the gather form at MSPCA
+    shapes on the CPU smoke runner. ``reference=True`` keeps the
+    historical gather + matmul formulation (equal up to float32
+    summation order; the layout the Pallas ``kernels/wpd`` kernel
+    tiles), which is also the fallback when the signal is too short to
+    pad with one wrap.
+    """
     h, g = filters(wavelet)
     n = x.shape[-1]
     assert n % 2 == 0, "signal length must be even"
-    idx = _window_indices(n, h.shape[0])
-    xw = x[..., idx]  # (..., N/2, L)
-    return xw @ h, xw @ g
+    taps = h.shape[0] // 2
+    if reference or n // 2 < taps - 1:
+        idx = _window_indices(n, h.shape[0])
+        xw = x[..., idx]  # (..., N/2, L)
+        return xw @ h, xw @ g
+    half = n // 2
+    phases = x.reshape(x.shape[:-1] + (half, 2))
+    xe, xo = phases[..., 0], phases[..., 1]
+    if taps > 1:
+        xe = jnp.concatenate([xe, xe[..., : taps - 1]], axis=-1)
+        xo = jnp.concatenate([xo, xo[..., : taps - 1]], axis=-1)
+    a = jnp.zeros(x.shape[:-1] + (half,), x.dtype)
+    d = jnp.zeros_like(a)
+    for j in range(taps):
+        se = xe[..., j : j + half]
+        so = xo[..., j : j + half]
+        a = a + h[2 * j] * se + h[2 * j + 1] * so
+        d = d + g[2 * j] * se + g[2 * j + 1] * so
+    return a, d
 
 
 def synthesis_step(a: jax.Array, d: jax.Array, wavelet: str = "db4") -> jax.Array:
-    """Inverse of ``analysis_step`` (transpose of the orthonormal operator)."""
+    """Inverse of ``analysis_step`` (transpose of the orthonormal operator).
+
+    Pad + static-slice polyphase formulation: output sample 2m+p (p in
+    {0, 1}) collects exactly the taps with k = 2j + p, each contributed
+    by coefficient (m - j) mod half -- the mirror of ``analysis_step``'s
+    forward shifts. Each coefficient branch is circularly padded ONCE at
+    the FRONT by the L/2 - 1 samples the wrap can reach; every tap is
+    then a static slice, fused by XLA into one elementwise accumulation,
+    and the even/odd phases are interleaved at the end. No scatter, no
+    window gather.
+    Equal to ``synthesis_step_reference`` up to float32 summation order
+    (the round-trip through ``analysis_step`` is exact either way;
+    tests/test_signal.py pins both). Falls back to the scatter reference
+    when the branch is too short to pad with one wrap.
+    """
+    h, g = filters(wavelet)
+    half = a.shape[-1]
+    taps = h.shape[0] // 2
+    if half < taps - 1:
+        return synthesis_step_reference(a, d, wavelet)
+    if taps > 1:
+        pa = jnp.concatenate([a[..., half - (taps - 1):], a], axis=-1)
+        pd = jnp.concatenate([d[..., half - (taps - 1):], d], axis=-1)
+    else:
+        pa, pd = a, d
+    even = jnp.zeros_like(a)
+    odd = jnp.zeros_like(a)
+    for j in range(taps):
+        sa = pa[..., taps - 1 - j : taps - 1 - j + half]
+        sd = pd[..., taps - 1 - j : taps - 1 - j + half]
+        even = even + h[2 * j] * sa + g[2 * j] * sd
+        odd = odd + h[2 * j + 1] * sa + g[2 * j + 1] * sd
+    return jnp.stack([even, odd], axis=-1).reshape(
+        a.shape[:-1] + (2 * half,)
+    )
+
+
+def synthesis_step_reference(
+    a: jax.Array, d: jax.Array, wavelet: str = "db4"
+) -> jax.Array:
+    """The longhand transpose: scatter-add each coefficient's taps.
+
+    This is the historical (pre-megabatch) formulation and the oracle
+    the polyphase ``synthesis_step`` is tested against. Kept shipped --
+    not just in tests -- because the serving benchmark's serial-replay
+    leg (``PipelineConfig(reference_kernels=True)``) measures the
+    old scoring path against the megabatch engine step.
+    """
     h, g = filters(wavelet)
     n = 2 * a.shape[-1]
     idx = _window_indices(n, h.shape[0])  # (N/2, L)
@@ -80,27 +175,49 @@ def synthesis_step(a: jax.Array, d: jax.Array, wavelet: str = "db4") -> jax.Arra
     return out.at[..., idx].add(contrib)
 
 
-def dwt(x: jax.Array, level: int, wavelet: str = "db4") -> list[jax.Array]:
-    """Multi-level DWT: returns [D1, D2, ..., Dlevel, Alevel]."""
+def dwt(
+    x: jax.Array, level: int, wavelet: str = "db4", *, reference: bool = False
+) -> list[jax.Array]:
+    """Multi-level DWT: returns [D1, D2, ..., Dlevel, Alevel].
+
+    ``reference=True`` routes every level through the gather + matmul
+    ``analysis_step`` formulation (the pre-megabatch kernels).
+    """
     coeffs = []
     cur = x
     for _ in range(level):
-        cur, d = analysis_step(cur, wavelet)
+        cur, d = analysis_step(cur, wavelet, reference=reference)
         coeffs.append(d)
     coeffs.append(cur)
     return coeffs
 
 
-def idwt(coeffs: list[jax.Array], wavelet: str = "db4") -> jax.Array:
-    """Inverse of ``dwt`` ([D1..Dlevel, Alevel] -> x)."""
+def idwt(
+    coeffs: list[jax.Array], wavelet: str = "db4", *, reference: bool = False
+) -> jax.Array:
+    """Inverse of ``dwt`` ([D1..Dlevel, Alevel] -> x).
+
+    ``reference=True`` routes every level through the scatter-add
+    ``synthesis_step_reference`` (the pre-megabatch formulation) instead
+    of the polyphase default -- the serving bench's serial-replay leg.
+    """
+    step = synthesis_step_reference if reference else synthesis_step
     cur = coeffs[-1]
     for d in reversed(coeffs[:-1]):
-        cur = synthesis_step(cur, d, wavelet)
+        cur = step(cur, d, wavelet)
     return cur
 
 
-@functools.partial(jax.jit, static_argnames=("level", "wavelet", "use_kernel"))
-def wpd(x: jax.Array, level: int, wavelet: str = "db4", use_kernel: bool = False) -> jax.Array:
+@functools.partial(
+    jax.jit, static_argnames=("level", "wavelet", "use_kernel", "reference")
+)
+def wpd(
+    x: jax.Array,
+    level: int,
+    wavelet: str = "db4",
+    use_kernel: bool = False,
+    reference: bool = False,
+) -> jax.Array:
     """Wavelet Packet Decomposition.
 
     x (..., N) -> (..., 2**level, N // 2**level) terminal coefficient sets
@@ -109,7 +226,9 @@ def wpd(x: jax.Array, level: int, wavelet: str = "db4", use_kernel: bool = False
     Sec. 2.2).
 
     use_kernel=True routes the per-level filterbank through the Pallas
-    ``kernels/wpd`` kernel (TPU target; interpret-mode on CPU).
+    ``kernels/wpd`` kernel (TPU target; interpret-mode on CPU);
+    reference=True keeps the gather + matmul ``analysis_step``
+    formulation (the pre-megabatch kernels).
     """
     lead = x.shape[:-1]
     n = x.shape[-1]
@@ -126,7 +245,7 @@ def wpd(x: jax.Array, level: int, wavelet: str = "db4", use_kernel: bool = False
             a = a.reshape(nodes.shape[:-1] + (-1,))
             d = d.reshape(nodes.shape[:-1] + (-1,))
         else:
-            a, d = analysis_step(nodes, wavelet)
+            a, d = analysis_step(nodes, wavelet, reference=reference)
         # Interleave so node 2i is the low branch of node i, 2i+1 the high.
         nodes = jnp.stack([a, d], axis=-2).reshape(
             lead + (a.shape[-2] * 2, a.shape[-1])

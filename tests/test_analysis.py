@@ -397,6 +397,35 @@ class TestSanitizers:
                 engine.poll()
         assert steady.total == 0, steady.by_name
 
+    def test_engine_replay_mixed_depth_recompile_budget(
+        self, program, chunk_pool
+    ):
+        # Ragged backlogs (1, 3, 2, 4 chunks per poll) against a
+        # replay_depth=4 engine: the megabatch step pads every dispatch
+        # to the fixed D, so the whole mixed-depth schedule must compile
+        # ONE program -- the historical depth bucketing compiled up to
+        # replay_depth distinct ones.
+        budgets = load_budgets()
+        quiet, pre = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=2, replay_depth=4)
+        session = engine.open_session(0)
+        with CompileCounter() as warm:
+            for n_chunks in (1, 3, 2, 4):
+                session.push(
+                    np.concatenate([quiet, pre] * 2)[: n_chunks * 60]
+                )
+                engine.poll()
+        assert warm.count("_engine_step_megabatch") <= (
+            budgets["engine_replay_mixed_depth"]
+        )
+        with CompileCounter() as steady:
+            for n_chunks in (2, 1, 4):
+                session.push(
+                    np.concatenate([quiet, pre] * 2)[: n_chunks * 60]
+                )
+                engine.poll()
+        assert steady.total == 0, steady.by_name
+
     def test_score_chunks_recompile_budget(self, program, chunk_pool):
         budgets = load_budgets()
         quiet, _ = chunk_pool

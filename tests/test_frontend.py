@@ -151,7 +151,8 @@ class TestBacklogReplay:
         )
 
     def test_depth_deeper_than_backlog(self, program, chunk_pool):
-        # depth 4 > 2 queued chunks: the step buckets down to depth 2.
+        # depth 4 > 2 queued chunks: the fixed-D step pads the backlog
+        # axis with masked chunks; events are unaffected.
         check_replay_depth_equivalence(program, chunk_pool, [1, 1], depth=4)
 
     def test_multi_patient_replay_matches_oracle(self, program, chunk_pool):

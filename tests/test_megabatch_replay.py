@@ -1,0 +1,153 @@
+"""Megabatch engine step vs the serial-scan oracle: EVENT BYTE-IDENTITY.
+
+``SeizureEngine(megabatch=True)`` (the default) runs the de-serialized
+two-stage step -- denoise+WPD+forest batched over the whole (B, D)
+backlog, halos assembled from the backlog buffer itself -- while
+``megabatch=False`` keeps the historical per-chunk ``lax.scan``. The two
+share every numeric building block (``frontend.chunk_features``,
+``_vote_chunks``, the masked ring advance), so their emitted events must
+match BYTE FOR BYTE -- votes, fractions, alarms, and every window
+prediction -- at every replay depth and overlap setting, through
+eviction/admission churn and ragged (partially filled) backlogs.
+
+The deterministic matrix covers replay_depth {1, 2, 4, 8} x overlap
+{0, 2}; the hypothesis twin draws schedules, depths, and churn (profile
+"ci" on the PR gate, "deep" on the scheduled fuzzing job -- no
+per-test @settings, they would override the profile).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.serving import api
+
+from test_frontend import events_key
+
+# Shared fixtures (program, overlap_program, chunk_pool) in conftest.py.
+
+
+def _schedule(pool, *, n_sessions, chunks_per_session, seed):
+    """Deterministic push/poll schedule, built BEFORE any engine exists
+    so the megabatch and serial runs replay the exact same traffic.
+
+    Returns a list of ("push", pid, windows) / ("poll", drain) ops.
+    Pushes are intentionally non-chunk-aligned (ragged window bursts)
+    and polls are sporadic, so backlogs of different depths build up
+    per session and slots see partially-filled (masked) replay axes.
+    """
+    rng = np.random.RandomState(seed)
+    streams = {
+        pid: np.concatenate(
+            [pool[int(i)] for i in rng.randint(0, len(pool), size=n)]
+        )
+        for pid, n in enumerate(chunks_per_session)
+    }
+    # Split each stream into random-size bursts (1..139 windows).
+    remaining = {}
+    for pid, s in streams.items():
+        parts, i = [], 0
+        while i < s.shape[0]:
+            n = int(rng.randint(1, 140))
+            parts.append(s[i : i + n])
+            i += n
+        remaining[pid] = parts
+    ops = []
+    while any(remaining.values()):
+        pid = int(rng.choice([p for p, parts in remaining.items() if parts]))
+        ops.append(("push", pid, remaining[pid].pop(0)))
+        if rng.rand() < 0.35:
+            ops.append(("poll", bool(rng.rand() < 0.5)))
+    ops.append(("poll", True))
+    return ops
+
+
+def _run(program, ops, *, megabatch, replay_depth, max_batch, n_sessions):
+    engine = api.SeizureEngine(
+        program, max_batch=max_batch, replay_depth=replay_depth,
+        megabatch=megabatch,
+    )
+    sessions = {pid: engine.open_session(pid) for pid in range(n_sessions)}
+    events = []
+    for op in ops:
+        if op[0] == "push":
+            sessions[op[1]].push(op[2])
+        else:
+            events += engine.poll(drain=op[1])
+    return events_key(events)
+
+
+def check_megabatch_matches_serial(
+    program, pool, *, replay_depth, seed, max_batch=2,
+    chunks_per_session=(3, 2, 1),
+):
+    ops = _schedule(
+        pool, n_sessions=len(chunks_per_session),
+        chunks_per_session=chunks_per_session, seed=seed,
+    )
+    kw = dict(
+        replay_depth=replay_depth, max_batch=max_batch,
+        n_sessions=len(chunks_per_session),
+    )
+    mega = _run(program, ops, megabatch=True, **kw)
+    serial = _run(program, ops, megabatch=False, **kw)
+    assert mega == serial, (
+        f"megabatch events diverge from the serial oracle at "
+        f"replay_depth={replay_depth}, overlap={program.cfg.overlap}"
+    )
+
+
+class TestMegabatchEventIdentity:
+    """3 sessions over 2 slots (continuous churn), ragged backlogs."""
+
+    @pytest.mark.parametrize("depth", [1, 2, 4, 8])
+    def test_overlap0(self, program, chunk_pool, depth):
+        check_megabatch_matches_serial(
+            program, chunk_pool, replay_depth=depth, seed=depth,
+            chunks_per_session=(min(depth + 1, 5), 2, 1),
+        )
+
+    @pytest.mark.parametrize("depth", [1, 2, 4, 8])
+    def test_overlap2(self, overlap_program, chunk_pool, depth):
+        check_megabatch_matches_serial(
+            overlap_program, chunk_pool, replay_depth=depth, seed=100 + depth,
+            chunks_per_session=(min(depth + 1, 5), 2, 1),
+        )
+
+    def test_deep_single_session_backlog(self, program, chunk_pool):
+        # The catch-up shape the megabatch exists for: one session, a
+        # backlog deeper than D, scored in successive full-depth steps.
+        check_megabatch_matches_serial(
+            program, chunk_pool, replay_depth=4, seed=7,
+            max_batch=1, chunks_per_session=(9,),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis twin (drawn schedules through the same checker)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, strategies as st
+
+    @given(data=st.data())
+    def test_megabatch_matches_serial_fuzzed(
+        program, overlap_program, chunk_pool, data
+    ):
+        use_overlap = data.draw(st.booleans(), label="overlap")
+        depth = data.draw(st.sampled_from([1, 2, 3, 4, 8]), label="depth")
+        n_sessions = data.draw(st.integers(1, 3), label="n_sessions")
+        chunks = tuple(
+            data.draw(st.integers(1, 4), label=f"patient{p}_chunks")
+            for p in range(n_sessions)
+        )
+        seed = data.draw(st.integers(0, 2**16 - 1), label="schedule_seed")
+        max_batch = data.draw(st.integers(1, 2), label="max_batch")
+        check_megabatch_matches_serial(
+            overlap_program if use_overlap else program,
+            chunk_pool, replay_depth=depth, seed=seed,
+            max_batch=max_batch, chunks_per_session=chunks,
+        )
+except ImportError:  # hypothesis is a CI dependency, not a runtime one
+    pass

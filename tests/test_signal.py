@@ -33,6 +33,32 @@ class TestWavelet:
         xr = wavelet.synthesis_step(a, d, name)
         np.testing.assert_allclose(np.asarray(xr), np.asarray(x), atol=1e-5)
 
+    @pytest.mark.parametrize("name", ["db1", "db2", "db3", "db4"])
+    def test_polyphase_synthesis_matches_scatter_reference(self, name):
+        # The polyphase gather form and the longhand scatter-add
+        # transpose are the same linear operator; they may differ only
+        # in float32 summation order (a few ulp on unit-scale input).
+        key = jax.random.PRNGKey(3)
+        a = jax.random.normal(key, (2, 5, 64))
+        d = jax.random.normal(jax.random.PRNGKey(4), (2, 5, 64))
+        fast = wavelet.synthesis_step(a, d, name)
+        ref = wavelet.synthesis_step_reference(a, d, name)
+        np.testing.assert_allclose(
+            np.asarray(fast), np.asarray(ref), atol=1e-5, rtol=1e-5
+        )
+
+    def test_idwt_reference_flag_routes_scatter_path(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (3, 256))
+        coeffs = wavelet.dwt(x, 4, "db4")
+        fast = wavelet.idwt(coeffs, "db4")
+        ref = wavelet.idwt(coeffs, "db4", reference=True)
+        # Both are (near-)perfect inverses; cross-difference stays at
+        # summation-order noise.
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(x), atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(fast), np.asarray(ref), atol=1e-5, rtol=1e-5
+        )
+
     def test_perfect_reconstruction_multilevel(self):
         x = jax.random.normal(jax.random.PRNGKey(1), (3, 256))
         coeffs = wavelet.dwt(x, 5, "db4")
@@ -98,6 +124,14 @@ class TestMSPCA:
         den = mspca.denoise(noisy)
         assert den.shape == noisy.shape
         assert bool(jnp.isfinite(den).all())
+
+    def test_reference_kernels_path_is_equal_up_to_fp_order(self):
+        _, noisy = self._noisy_lowrank(jax.random.PRNGKey(4))
+        fast = mspca.denoise(noisy, level=4, keep=2)
+        ref = mspca.denoise(noisy, level=4, keep=2, reference_kernels=True)
+        np.testing.assert_allclose(
+            np.asarray(fast), np.asarray(ref), atol=1e-5, rtol=1e-5
+        )
 
     def test_kaiser_mode_runs(self):
         _, noisy = self._noisy_lowrank(jax.random.PRNGKey(2))
