@@ -44,6 +44,8 @@ import argparse
 import collections
 import dataclasses
 import functools
+import itertools
+import tempfile
 import time
 
 import jax
@@ -337,12 +339,58 @@ def run_seizure_replay_megabatch(rows: Rows, smoke: bool = False) -> None:
              "serial-scan time / megabatch time (>=1 = megabatch wins)")
 
 
+def run_seizure_checkpoint(rows: Rows, smoke: bool = False) -> None:
+    """Engine persistence: snapshot/restore wall time + hot-swap latency.
+
+    A warm engine with resident sessions AND queued backlog (so the
+    snapshot carries real state, not an empty shell) is snapshotted to
+    disk, restored from disk, and live-swapped to a freshly trained
+    same-shape program. Rows are rates (1/latency, higher-is-better) so
+    ``compare_baseline.py`` can gate them like every other row. The swap
+    leg is the headline: it is the paper's retrain-and-redeploy step, and
+    it must stay pure host work (aval-stable jit cache hits -- 0
+    recompiles, pinned separately in analysis/budgets.json).
+    """
+    fitted, cfg, program = _fitted_program(smoke)
+    rec = eeg_data.make_training_set(jax.random.PRNGKey(11), 3, 60, 60)
+    program2 = ScoringProgram.from_fitted(
+        pipeline.fit(jax.random.PRNGKey(12), rec, cfg), cfg
+    )
+    per = eeg_data.WINDOWS_PER_MATRIX
+    n_sessions = 2 if smoke else 4
+    reps = 3  # persistence is host-side I/O: noisy, median of 3 always
+    stream = np.asarray(eeg_data.generate_windows(
+        jax.random.PRNGKey(6), jnp.asarray(3), eeg_data.INTERICTAL, 2 * per,
+    ))
+    engine = SeizureEngine(program, max_batch=n_sessions)
+    for pid in range(n_sessions):
+        engine.open_session(pid).push(stream)
+    engine.poll()  # warm the step; sessions stay resident in slots
+    for pid in range(n_sessions):
+        engine.session(pid).push(stream)  # queued backlog rides the snapshot
+
+    with tempfile.TemporaryDirectory() as d:
+        t_snap = time_fn(lambda: engine.snapshot(d, 0), iters=reps) / 1e6
+        t_rest = time_fn(lambda: SeizureEngine.restore(d), iters=reps) / 1e6
+    programs = itertools.cycle([program2, program])
+    t_swap = time_fn(lambda: engine.swap_program(next(programs)),
+                     iters=reps) / 1e6
+    note = f"{n_sessions} resident sessions, {2 * per}-window backlog each"
+    rows.add("serving/checkpoint/snapshot_per_s", 1.0 / t_snap,
+             f"snapshot in {t_snap*1e3:.1f}ms; {note}")
+    rows.add("serving/checkpoint/restore_per_s", 1.0 / t_rest,
+             f"restore in {t_rest*1e3:.1f}ms; {note}")
+    rows.add("serving/checkpoint/swap_per_s", 1.0 / t_swap,
+             f"live swap_program in {t_swap*1e3:.2f}ms (0 recompiles)")
+
+
 def run(rows: Rows, arch: str = "qwen3-0.6b", smoke: bool = False) -> None:
     run_lm(rows, arch=arch, smoke=smoke)
     run_seizure(rows, smoke=smoke)
     run_seizure_staggered(rows, smoke=smoke)
     run_seizure_replay(rows, smoke=smoke)
     run_seizure_replay_megabatch(rows, smoke=smoke)
+    run_seizure_checkpoint(rows, smoke=smoke)
 
 
 if __name__ == "__main__":

@@ -185,6 +185,22 @@ def _serving_entries():
         static_kwargs=dict(max_batch=B, alarm_m=cfg.alarm_m),
         description="on-device zero engine state (no host zeros transfer)",
     )
+    yield EntrySpec(
+        name="serving.engine_restore",
+        fn=api._install_state,
+        args=(state,),
+        carry=(0, None),
+        description="snapshot-restore state install: canonicalize restored "
+                    "leaves so the first post-restore step is a cache hit",
+    )
+    yield EntrySpec(
+        name="serving.engine_swap_program",
+        fn=api._install_program_arrays,
+        args=(packed, mean, std),
+        carry=(0, 0),
+        description="live program hot-swap install: same-shape program "
+                    "arrays stay step inputs (drain-free, 0 recompiles)",
+    )
 
 
 def _signal_entries():

@@ -31,6 +31,11 @@ def _flatten(tree: Any):
 
 def save(directory: str, step: int, tree: Any) -> str:
     keyed, _ = _flatten(tree)
+    # The temp dir must live INSIDE `directory` (the atomic rename below
+    # has to stay on one filesystem), and mkdtemp does not create parent
+    # directories -- a save into a fresh path used to die with
+    # FileNotFoundError unless the caller happened to pre-create it.
+    os.makedirs(directory, exist_ok=True)
     target = os.path.join(directory, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
     manifest = {}
@@ -56,11 +61,36 @@ def save(directory: str, step: int, tree: Any) -> str:
 
 
 def latest_step(directory: str) -> int | None:
+    """Highest completed step under ``directory`` (None if none).
+
+    Also garbage-collects stale ``.tmp_ckpt_*`` temp dirs: a run killed
+    mid-``save`` leaves its temp dir behind (the atomicity guarantee --
+    the half-written checkpoint never becomes a ``step_*`` dir), and
+    without the sweep here they accumulate forever.
+    """
     if not os.path.isdir(directory):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_")]
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith(".tmp_ckpt_"):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+            continue
+        suffix = d[len("step_"):]
+        if d.startswith("step_") and suffix.isdigit():
+            steps.append(int(suffix))
     return max(steps) if steps else None
+
+
+def _step_dir(directory: str, step: int) -> str:
+    """Path of one completed checkpoint, with a named error when it is
+    missing (instead of an opaque downstream open() failure)."""
+    src = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.isfile(os.path.join(src, "manifest.json")):
+        raise FileNotFoundError(
+            f"no checkpoint manifest under {src!r} (missing or incomplete "
+            f"step {step} in {directory!r})"
+        )
+    return src
 
 
 def manifest_like(directory: str, step: int) -> dict[str, jax.ShapeDtypeStruct]:
@@ -72,7 +102,7 @@ def manifest_like(directory: str, step: int) -> dict[str, jax.ShapeDtypeStruct]:
     Nested pytrees flatten their paths into the key and need the caller
     to supply the structured ``like`` instead.
     """
-    src = os.path.join(directory, f"step_{step:08d}")
+    src = _step_dir(directory, step)
     with open(os.path.join(src, "manifest.json")) as f:
         manifest = json.load(f)["leaves"]
 
@@ -89,7 +119,7 @@ def restore(directory: str, step: int, like: Any,
             shardings: Any | None = None) -> Any:
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs); optionally place with ``shardings`` (same tree)."""
-    src = os.path.join(directory, f"step_{step:08d}")
+    src = _step_dir(directory, step)
     with open(os.path.join(src, "manifest.json")) as f:
         manifest = json.load(f)["leaves"]
     keyed_like, treedef = _flatten(like)
@@ -104,8 +134,20 @@ def restore(directory: str, step: int, like: Any,
         arr = np.load(os.path.join(src, entry["file"]))
         if entry["dtype"] == "bfloat16":
             arr = arr.view(jax.numpy.bfloat16.dtype)
-        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
-                                                       leaf.shape)
+        # A real error, not a bare assert: `python -O` strips asserts,
+        # which would let a shape-drifted checkpoint restore garbage
+        # silently (leaves reinterpreted into the wrong structure).
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {key!r}: saved shape {tuple(arr.shape)} "
+                f"!= expected {tuple(leaf.shape)} -- the checkpoint does "
+                "not match the `like` structure"
+            )
+        if np.dtype(leaf.dtype) != arr.dtype:
+            raise ValueError(
+                f"checkpoint leaf {key!r}: saved dtype {arr.dtype} != "
+                f"expected {np.dtype(leaf.dtype)}"
+            )
         if flat_shardings is not None:
             out[key] = jax.device_put(arr, flat_shardings[key])
         else:

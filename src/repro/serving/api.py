@@ -42,7 +42,6 @@ import collections
 import dataclasses
 import functools
 import json
-import os
 import time
 from typing import NamedTuple
 
@@ -70,6 +69,11 @@ class ChunkScored(NamedTuple):
     preictal_frac: float   # fraction of the chunk's windows voted preictal
     alarm: int             # k-of-m alarm state AFTER this chunk
     window_preds: np.ndarray  # (chunk_windows,) int32 per-window labels
+    # Which installed program scored this chunk: the engine's running
+    # program version (0 at construction, bumped by each ``swap_program``)
+    # so callers can attribute every score to a model version across
+    # live hot-swaps.
+    program_version: int = 0
 
 
 class AlarmRaised(NamedTuple):
@@ -130,31 +134,22 @@ class ScoringProgram:
             "feat_std": self.feat_std,
         }
 
-    def save(self, directory: str, step: int = 0) -> str:
-        """Write the program under ``directory/step_<step>`` (atomic).
-
-        The static config rides INSIDE the checkpoint as a uint8 leaf
-        (JSON bytes), so the store's temp-dir + rename atomicity covers
-        the whole artifact -- a killed save never leaves arrays without
-        their config."""
-        os.makedirs(directory, exist_ok=True)
+    def _to_arrays(self) -> dict[str, np.ndarray]:
+        """The complete artifact as one flat checkpoint-store tree: the
+        array leaves plus the static config as a uint8 JSON leaf -- the
+        same encoding both ``save`` and the engine snapshot embed."""
         cfg_json = self.cfg._asdict()
         cfg_json["forest"] = self.cfg.forest._asdict()
         arrays = dict(self._arrays())
         arrays["cfg_json"] = np.frombuffer(
             json.dumps(cfg_json).encode(), dtype=np.uint8
         )
-        return ckpt_store.save(directory, step, arrays)
+        return arrays
 
     @classmethod
-    def load(cls, directory: str, step: int | None = None) -> "ScoringProgram":
-        """Restore a saved program (latest step when ``step`` is None)."""
-        if step is None:
-            step = ckpt_store.latest_step(directory)
-            if step is None:
-                raise FileNotFoundError(f"no checkpoints under {directory}")
-        like = ckpt_store.manifest_like(directory, step)
-        arrays = ckpt_store.restore(directory, step, like)
+    def _from_arrays(cls, arrays: dict) -> "ScoringProgram":
+        """Inverse of ``_to_arrays`` (shared by ``load`` and
+        ``SeizureEngine.restore``)."""
         cfg_json = json.loads(
             np.asarray(arrays.pop("cfg_json")).tobytes().decode()
         )
@@ -169,6 +164,28 @@ class ScoringProgram:
             feat_std=arrays["feat_std"],
             cfg=cfg,
         )
+
+    def save(self, directory: str, step: int = 0) -> str:
+        """Write the program under ``directory/step_<step>`` (atomic).
+
+        The static config rides INSIDE the checkpoint as a uint8 leaf
+        (JSON bytes), so the store's temp-dir + rename atomicity covers
+        the whole artifact -- a killed save never leaves arrays without
+        their config."""
+        return ckpt_store.save(directory, step, self._to_arrays())
+
+    @classmethod
+    def load(cls, directory: str, step: int | None = None) -> "ScoringProgram":
+        """Restore a saved program (latest step when ``step`` is None)."""
+        if step is None:
+            step = ckpt_store.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no ScoringProgram checkpoints under {directory!r} "
+                    "(empty or missing directory)"
+                )
+        like = ckpt_store.manifest_like(directory, step)
+        return cls._from_arrays(ckpt_store.restore(directory, step, like))
 
 
 # ---------------------------------------------------------------------------
@@ -422,6 +439,47 @@ def _splice_state(
     )
 
 
+@jax.jit
+def _install_state(state: EngineState) -> EngineState:
+    """Restore-path state install: cast every snapshot leaf to the
+    engine state's canonical avals (strong int32/float32).
+
+    The first engine step after ``SeizureEngine.restore`` must be a jit
+    CACHE HIT in a warm process -- any aval drift (a weak type or dtype
+    picked up on the disk round-trip) would recompile the step per
+    restore. Registered as ``serving.engine_restore``: the carry-stable
+    contract rule pins output avals == input avals statically."""
+    return EngineState(
+        rings=state.rings.astype(jnp.int32),
+        ring_pos=state.ring_pos.astype(jnp.int32),
+        alarm=state.alarm.astype(jnp.int32),
+        fe_boundary=state.fe_boundary.astype(jnp.float32),
+        fe_phase=state.fe_phase.astype(jnp.int32),
+    )
+
+
+@jax.jit
+def _install_program_arrays(packed, feat_mean, feat_std):
+    """Program install: cast a (new) program's array leaves to the
+    serving step's pinned avals (strong float32).
+
+    Every program the engine serves -- the constructor's, a restored
+    snapshot's, or a live ``swap_program`` push -- goes through this, so
+    installing a same-shape program can NEVER change the step's input
+    avals: the program arrays are step *inputs* (never baked into the
+    compiled program), which is what makes the hot-swap drain-free with
+    zero recompiles. Registered as ``serving.engine_swap_program``."""
+    return (
+        forest_ops.PackedForest(
+            proj=packed.proj.astype(jnp.float32),
+            thr=packed.thr.astype(jnp.float32),
+            leaf_probs=packed.leaf_probs.astype(jnp.float32),
+        ),
+        feat_mean.astype(jnp.float32),
+        feat_std.astype(jnp.float32),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Sessions
 # ---------------------------------------------------------------------------
@@ -588,6 +646,7 @@ class SeizureEngine:
         # when cfg.overlap > 0; a single carried-but-unused window else).
         self.fe_width = frontend.boundary_width(program.cfg.overlap)
         self.steps = 0  # jitted step invocations (scheduling observability)
+        self.program_version = 0  # bumped by each swap_program
         self._clock = clock
 
         self._sessions: dict[int, StreamSession] = {}
@@ -604,6 +663,8 @@ class SeizureEngine:
             )
             self._splice = _splice_state
             self._score = _jit_score_chunks
+            self._state_sharding = None
+            self._program_sharding = None
         else:
             if max_batch % mesh.shape["data"] != 0:
                 raise ValueError(
@@ -617,6 +678,11 @@ class SeizureEngine:
                 fe_boundary=data, fe_phase=data,
             )
             self._state = jax.device_put(self._state, state_sh)
+            self._state_sharding = state_sh
+            self._program_sharding = (
+                forest_ops.PackedForest(proj=repl, thr=repl, leaf_probs=repl),
+                repl, repl,
+            )
             # Bind the static config via partial: pjit (jax 0.4) rejects
             # kwargs once in_shardings is given.
             statics = dict(cfg=program.cfg, use_pallas=use_forest_kernel)
@@ -640,6 +706,71 @@ class SeizureEngine:
                 in_shardings=(state_sh,) + (repl,) * 6,
                 out_shardings=state_sh,
             )
+
+        # Canonicalize the program leaves through the SAME install path a
+        # later ``swap_program`` takes, so the construction-time program
+        # and every hot-swapped successor present identical avals to the
+        # step: the swap is then a guaranteed jit cache hit.
+        self.program = self._install_program(program)
+
+    # -- program install / hot-swap ------------------------------------------
+
+    def _install_program(self, program: ScoringProgram) -> ScoringProgram:
+        packed, mean, std = _install_program_arrays(
+            program.packed, program.feat_mean, program.feat_std
+        )
+        if self._program_sharding is not None:
+            packed, mean, std = jax.device_put(
+                (packed, mean, std), self._program_sharding
+            )
+        return dataclasses.replace(
+            program, packed=packed, feat_mean=mean, feat_std=std
+        )
+
+    def swap_program(
+        self, new_program: ScoringProgram, *, version: int | None = None
+    ) -> int:
+        """Install a newly trained ``ScoringProgram`` into the RUNNING
+        engine -- no session drain, no step recompile.
+
+        The program arrays are step *inputs* (never constants baked into
+        the compiled step), so as long as the new program's packed shapes
+        match the old one's, the very next ``poll`` serves the new model:
+        in-flight alarm rings and frontend context are untouched, and
+        every subsequent ``ChunkScored`` carries the bumped
+        ``program_version``. Shape or static-config drift is rejected
+        up front with a ``ValueError`` (a differently shaped forest needs
+        a new engine -- its step would have to recompile anyway).
+
+        Returns the now-serving program version (``version`` if given,
+        else the running version + 1).
+        """
+        if new_program.cfg != self.program.cfg:
+            raise ValueError(
+                "swap_program: new program's PipelineConfig differs from "
+                f"the serving one ({new_program.cfg} != {self.program.cfg}); "
+                "the static config is compiled into the step -- open a new "
+                "engine instead"
+            )
+        old, new = self.program._arrays(), new_program._arrays()
+        mismatched = [
+            f"{k}: {tuple(new[k].shape)}/{new[k].dtype} != "
+            f"{tuple(old[k].shape)}/{old[k].dtype}"
+            for k in old
+            if tuple(new[k].shape) != tuple(old[k].shape)
+            or np.dtype(new[k].dtype) != np.dtype(old[k].dtype)
+        ]
+        if mismatched:
+            raise ValueError(
+                "swap_program: packed shapes must match the serving "
+                "program (drain-free swap keeps the step's avals fixed); "
+                "mismatched leaves: " + "; ".join(mismatched)
+            )
+        self.program = self._install_program(new_program)
+        self.program_version = (
+            self.program_version + 1 if version is None else int(version)
+        )
+        return self.program_version
 
     # -- sessions ------------------------------------------------------------
 
@@ -844,6 +975,7 @@ class SeizureEngine:
                     preictal_frac=float(frac[i, j]),
                     alarm=session.alarm,
                     window_preds=np.asarray(preds[i, j]),
+                    program_version=self.program_version,
                 ))
                 if session.alarm > prev_alarm:
                     events.append(
@@ -870,3 +1002,171 @@ class SeizureEngine:
             program.feat_mean, program.feat_std,
             cfg=program.cfg, use_pallas=self.use_forest_kernel,
         )
+
+    # -- persistence (snapshot / restore) ------------------------------------
+
+    def snapshot(self, directory: str, step: int) -> str:
+        """Persist the COMPLETE engine -- device state, every session's
+        host bookkeeping, and the serving program -- as one atomic
+        checkpoint (``checkpoint.store``'s temp-dir + rename writer, so a
+        killed snapshot never leaves a half-written step).
+
+        Snapshotting is non-mutating (pure ``jax.device_get`` reads): the
+        running engine continues bit-exactly whether or not a snapshot
+        was taken. Layout is one flat array tree:
+
+          * ``state__<leaf>``     -- the (B,)-leading ``EngineState``.
+          * ``program__<leaf>``   -- ``ScoringProgram._to_arrays()``.
+          * ``sess<pid>__<leaf>`` -- per-session queued chunks (k, W, C,
+            N), partial-chunk buffer, alarm ring, frontend halo.
+          * ``host_json``         -- uint8 JSON bytes: engine kwargs,
+            per-session scalars + queue ages, slot binding, and the
+            waiting-queue order (everything scheduling depends on).
+
+        Queued-chunk timestamps are stored as AGES (now - t) and rebased
+        onto the restoring engine's clock, so the latency budget keeps
+        meaning across a restart."""
+        arrays: dict[str, np.ndarray] = {}
+        for name, leaf in jax.device_get(self._state)._asdict().items():
+            arrays[f"state__{name}"] = np.asarray(leaf)
+        for name, leaf in self.program._to_arrays().items():
+            arrays[f"program__{name}"] = np.asarray(jax.device_get(leaf))
+        now = self._clock()
+        sessions_meta = []
+        for pid, s in self._sessions.items():
+            tag = f"sess{pid:08d}"
+            queued = [w for (_, w) in s.chunks]
+            arrays[f"{tag}__chunks"] = (
+                np.stack(queued).astype(np.float32) if queued
+                else np.zeros(
+                    (0, self.chunk_windows, eeg_data.N_CHANNELS,
+                     eeg_data.WINDOW), np.float32,
+                )
+            )
+            arrays[f"{tag}__buf"] = np.asarray(s._buf, np.float32)
+            arrays[f"{tag}__ring"] = np.asarray(s.ring, np.int32)
+            arrays[f"{tag}__fe_boundary"] = np.asarray(
+                s.fe_boundary, np.float32
+            )
+            sessions_meta.append({
+                "patient_id": pid,
+                "ring_pos": int(s.ring_pos),
+                "alarm": int(s.alarm),
+                "fe_phase": int(s.fe_phase),
+                "chunk_seq": int(s.chunk_seq),
+                "slot": s.slot,
+                "queued": bool(s.queued),
+                "chunk_ages": [float(now - t) for (t, _) in s.chunks],
+            })
+        host = {
+            "format": 1,
+            "engine": {
+                "max_batch": self.max_batch,
+                "chunk_windows": self.chunk_windows,
+                "replay_depth": self.replay_depth,
+                "megabatch": self.megabatch,
+                "latency_budget_s": self.latency_budget_s,
+                "use_forest_kernel": self.use_forest_kernel,
+                "steps": self.steps,
+                "program_version": self.program_version,
+            },
+            "sessions": sessions_meta,
+            "waiting": [s.patient_id for s in self._waiting],
+        }
+        arrays["host_json"] = np.frombuffer(
+            json.dumps(host).encode(), dtype=np.uint8
+        )
+        return ckpt_store.save(directory, step, arrays)
+
+    @classmethod
+    def restore(
+        cls,
+        directory: str,
+        step: int | None = None,
+        *,
+        megabatch: bool | None = None,
+        mesh: Mesh | None = None,
+        clock=time.monotonic,
+    ) -> "SeizureEngine":
+        """Rebuild a bit-identical engine from a ``snapshot`` (latest
+        step when ``step`` is None): the event stream it emits from here
+        on is byte-identical to the uninterrupted engine's (pinned by
+        tests/test_engine_checkpoint.py).
+
+        ``megabatch``/``mesh``/``clock`` may be overridden (the step
+        implementations are event-equal by the megabatch equality suite,
+        so switching them cannot perturb results); everything else comes
+        from the snapshot. The restored state passes through the jitted
+        ``_install_state`` canonicalizer, so in a warm process the first
+        post-restore step is a jit cache hit (``serving.engine_restore``
+        budget = 0 extra compiles)."""
+        if step is None:
+            step = ckpt_store.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no engine snapshots under {directory!r} "
+                    "(empty or missing directory)"
+                )
+        like = ckpt_store.manifest_like(directory, step)
+        arrays = ckpt_store.restore(directory, step, like)
+        host = json.loads(
+            np.asarray(jax.device_get(arrays["host_json"])).tobytes().decode()
+        )
+        if host.get("format") != 1:
+            raise ValueError(
+                f"unsupported engine snapshot format {host.get('format')!r} "
+                f"in {directory!r} step {step}"
+            )
+        eng = host["engine"]
+        program = ScoringProgram._from_arrays({
+            k[len("program__"):]: v
+            for k, v in arrays.items() if k.startswith("program__")
+        })
+        engine = cls(
+            program,
+            max_batch=eng["max_batch"],
+            chunk_windows=eng["chunk_windows"],
+            replay_depth=eng["replay_depth"],
+            megabatch=eng["megabatch"] if megabatch is None else megabatch,
+            latency_budget_s=eng["latency_budget_s"],
+            mesh=mesh,
+            use_forest_kernel=eng["use_forest_kernel"],
+            clock=clock,
+        )
+        engine.steps = int(eng["steps"])
+        engine.program_version = int(eng["program_version"])
+        state = EngineState(
+            *(arrays[f"state__{n}"] for n in EngineState._fields)
+        )
+        if engine._state_sharding is not None:
+            state = jax.device_put(state, engine._state_sharding)
+        engine._state = _install_state(state)
+        now = engine._clock()
+        for meta in host["sessions"]:
+            pid = int(meta["patient_id"])
+            tag = f"sess{pid:08d}"
+            s = engine.open_session(pid)
+            queued = np.asarray(
+                jax.device_get(arrays[f"{tag}__chunks"]), np.float32
+            )
+            for age, w in zip(meta["chunk_ages"], queued):
+                s.chunks.append((now - float(age), np.asarray(w)))
+            s._buf = np.asarray(jax.device_get(arrays[f"{tag}__buf"]),
+                                np.float32)
+            s.ring = np.asarray(jax.device_get(arrays[f"{tag}__ring"]),
+                                np.int32)
+            s.ring_pos = int(meta["ring_pos"])
+            s.alarm = int(meta["alarm"])
+            s.fe_boundary = np.asarray(
+                jax.device_get(arrays[f"{tag}__fe_boundary"]), np.float32
+            )
+            s.fe_phase = int(meta["fe_phase"])
+            s.chunk_seq = int(meta["chunk_seq"])
+            if meta["slot"] is not None:
+                s.slot = int(meta["slot"])
+                engine._slots[s.slot] = s
+        for pid in host["waiting"]:
+            s = engine._sessions[int(pid)]
+            engine._waiting.append(s)
+            s.queued = True
+        return engine

@@ -104,6 +104,50 @@ def init_batch(
     )
 
 
+def state_to_arrays(state: FrontendState) -> dict[str, np.ndarray]:
+    """One stream's (or a (B,)-leading batch's) carried context as a flat
+    numpy dict -- the ``checkpoint.store``-ready serialization every
+    frontend persister shares (``StreamingFrontend.state_dict`` and the
+    engine snapshot's per-slot/per-session leaves). Pure host reads
+    (explicit ``jax.device_get``): serializing never perturbs the
+    stream."""
+    boundary, phase = jax.device_get((state.boundary, state.phase))
+    return {
+        "boundary": np.asarray(boundary, np.float32),
+        "phase": np.asarray(phase, np.int32),
+    }
+
+
+def state_from_arrays(
+    arrays: dict, *, width: int | None = None
+) -> FrontendState:
+    """Inverse of ``state_to_arrays``; validates the layout up front so a
+    checkpoint from a different overlap setting fails loudly instead of
+    resuming with a silently wrong halo.
+
+    ``width`` (when given) pins the expected boundary depth --
+    ``boundary_width(cfg.overlap)`` of the consuming stream."""
+    boundary = np.asarray(arrays["boundary"], np.float32)
+    phase = np.asarray(arrays["phase"], np.int32)
+    if boundary.ndim not in (3, 4) or phase.ndim != boundary.ndim - 3:
+        raise ValueError(
+            f"frontend state layout mismatch: boundary ndim "
+            f"{boundary.ndim} / phase ndim {phase.ndim} is neither a "
+            "single stream ((H, C, N) + ()) nor a batch "
+            "((B, H, C, N) + (B,))"
+        )
+    got_width = boundary.shape[-3]
+    if width is not None and got_width != width:
+        raise ValueError(
+            f"frontend boundary width {got_width} != expected {width} "
+            "(= max(1, overlap)): the saved state comes from a different "
+            "overlap setting"
+        )
+    return FrontendState(
+        boundary=jax.device_put(boundary), phase=jax.device_put(phase)
+    )
+
+
 def chunk_features(
     chunk_windows: jax.Array, cfg, halo: jax.Array | None = None
 ) -> jax.Array:
@@ -353,3 +397,20 @@ class StreamingFrontend:
             self.state, jax.device_put(ready), self.cfg
         )
         return np.asarray(jax.device_get(feats)).reshape(n_ready * per, -1)
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """The complete resumable state (carried context + the buffered
+        partial chunk) as a flat numpy dict, ready for
+        ``checkpoint.store.save``."""
+        arrays = state_to_arrays(self.state)
+        arrays["buf"] = np.asarray(self._buf, np.float32)
+        return arrays
+
+    def load_state_dict(self, arrays: dict) -> None:
+        """Resume from a ``state_dict``: subsequent ``feed`` output is
+        byte-identical to the uninterrupted stream's. Rejects state from
+        a different overlap setting (boundary width mismatch)."""
+        self.state = state_from_arrays(
+            arrays, width=boundary_width(self.cfg.overlap)
+        )
+        self._buf = np.asarray(arrays["buf"], np.float32)

@@ -164,10 +164,12 @@ _TRANSFER_GUARDED_SUITES = {
     "tests.test_engine_properties",
     "tests.test_frontend",
     "tests.test_overlap_mspca",
+    "tests.test_engine_checkpoint",
     "test_seizure_engine",
     "test_engine_properties",
     "test_frontend",
     "test_overlap_mspca",
+    "test_engine_checkpoint",
 }
 
 

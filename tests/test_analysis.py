@@ -306,6 +306,7 @@ class TestRealRegistry:
         required = {
             "serving.engine_step", "serving.score_chunks",
             "serving.splice_state", "serving.init_state",
+            "serving.engine_restore", "serving.engine_swap_program",
             "signal.frontend_step", "signal.frontend_step_overlap2",
             "signal.process_windows_scan",
             "core.fit_forest_binned", "core.fit_mapreduce_map",

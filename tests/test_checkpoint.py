@@ -65,8 +65,54 @@ def test_manifest_like_restores_flat_dict(tmp_path):
 
 
 def test_shape_mismatch_raises(tmp_path):
+    # A real ValueError naming the offending leaf, NOT a bare assert:
+    # `python -O` strips asserts, which would let a shape-drifted
+    # checkpoint restore garbage silently.
     state = _state()
     ckpt.save(str(tmp_path), 1, state)
     bad = jax.tree.map(lambda x: jax.ShapeDtypeStruct((9,), x.dtype), state)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match=r"saved shape.*expected \(9,\)"):
         ckpt.restore(str(tmp_path), 1, bad)
+
+
+def test_dtype_mismatch_raises(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32)}
+    ckpt.save(str(tmp_path), 1, tree)
+    bad = {"a": jax.ShapeDtypeStruct((6,), jnp.int32)}
+    with pytest.raises(ValueError, match="saved dtype float32"):
+        ckpt.restore(str(tmp_path), 1, bad)
+
+
+def test_save_creates_missing_directory(tmp_path):
+    # Regression: save into a directory that does not exist yet used to
+    # die in tempfile.mkdtemp(dir=...) with FileNotFoundError unless the
+    # caller happened to pre-create it.
+    fresh = os.path.join(str(tmp_path), "nested", "ckpts")
+    path = ckpt.save(fresh, 4, {"a": jnp.ones((3,), jnp.float32)})
+    assert os.path.isdir(path)
+    assert ckpt.latest_step(fresh) == 4
+
+
+def test_latest_step_gc_stale_tmp_dirs(tmp_path):
+    # A run killed mid-save leaves its .tmp_ckpt_* dir behind; discovery
+    # must neither count it as a step nor let it accumulate forever.
+    ckpt.save(str(tmp_path), 2, {"a": jnp.ones((3,), jnp.float32)})
+    stale = os.path.join(str(tmp_path), ".tmp_ckpt_deadbeef")
+    os.makedirs(stale)
+    with open(os.path.join(stale, "a.npy"), "wb") as f:
+        f.write(b"half-written")
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    assert not os.path.exists(stale)  # garbage-collected
+
+
+def test_latest_step_ignores_malformed_names(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.ones((3,), jnp.float32)})
+    os.makedirs(os.path.join(str(tmp_path), "step_notanumber"))
+    os.makedirs(os.path.join(str(tmp_path), "unrelated"))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_missing_step_raises_filenotfound(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no checkpoint manifest"):
+        ckpt.restore(str(tmp_path), 3,
+                     {"a": jax.ShapeDtypeStruct((3,), jnp.float32)})

@@ -1,0 +1,370 @@
+"""Engine snapshot/restore + live program hot-swap: BYTE-IDENTITY.
+
+``SeizureEngine.snapshot`` persists the complete engine -- device state,
+per-session host bookkeeping (queued chunks, partial-chunk buffers,
+alarm rings, frontend halos), slot binding, waiting-queue order, and the
+serving ``ScoringProgram`` -- through the atomic checkpoint store;
+``SeizureEngine.restore`` rebuilds an engine whose remaining event
+stream is byte-identical to the uninterrupted run. The deterministic
+matrix covers megabatch {True, False} x overlap {0, 2} over the
+seam-oracle fixtures with 3 sessions churning through 2 slots; the
+hypothesis twin draws the snapshot point, schedule, and engine geometry
+(profiles "ci"/"deep", as everywhere).
+
+``swap_program`` installs a same-shape retrained program into the live
+engine: no drain, no recompile (pinned against analysis/budgets.json),
+version stamps on every ``ChunkScored``, loud ValueError on shape or
+static-config drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import load_budgets
+from repro.analysis.sanitizers import CompileCounter
+from repro.kernels.forest import ops as forest_ops
+from repro.serving import api
+from repro.signal import eeg_data, frontend, pipeline
+
+from test_frontend import events_key
+from test_megabatch_replay import _schedule
+
+# Shared fixtures (program, overlap_program, chunk_pool, seam_stream,
+# small_cfg, overlap_cfg) in conftest.py.
+
+
+@pytest.fixture(scope="session")
+def program_v2(small_cfg):
+    """A retrained program with the SAME packed shapes as ``program``
+    (same forest config, fresh data + key): the hot-swap payload."""
+    rec = eeg_data.make_training_set(
+        jax.random.PRNGKey(77), 3,
+        n_interictal_windows=60, n_preictal_windows=60,
+    )
+    fitted2 = pipeline.fit(jax.random.PRNGKey(2), rec, small_cfg)
+    return api.ScoringProgram.from_fitted(fitted2, small_cfg)
+
+
+def _run_ops(engine, sessions, ops):
+    events = []
+    for op in ops:
+        if op[0] == "push":
+            sessions[op[1]].push(op[2])
+        else:
+            events += engine.poll(drain=op[1])
+    return events
+
+
+def check_snapshot_restore(
+    program, pool, directory, *, megabatch, seed, snap_at=None,
+    replay_depth=2, max_batch=2, chunks_per_session=(3, 2, 2),
+):
+    """Snapshot mid-schedule, restore, and pin BOTH guarantees at once:
+    the restored engine's remaining events equal the uninterrupted
+    oracle's tail, and taking the snapshot perturbed nothing (the
+    snapshotting engine's own head rides the same comparison)."""
+    n_sessions = len(chunks_per_session)
+    ops = _schedule(
+        pool, n_sessions=n_sessions,
+        chunks_per_session=chunks_per_session, seed=seed,
+    )
+    k = len(ops) // 2 if snap_at is None else snap_at
+    kw = dict(max_batch=max_batch, replay_depth=replay_depth,
+              megabatch=megabatch)
+
+    oracle = api.SeizureEngine(program, **kw)
+    full = _run_ops(
+        oracle, {p: oracle.open_session(p) for p in range(n_sessions)}, ops
+    )
+
+    engine = api.SeizureEngine(program, **kw)
+    sessions = {p: engine.open_session(p) for p in range(n_sessions)}
+    head = _run_ops(engine, sessions, ops[:k])
+    steps_at_snap = engine.steps
+    engine.snapshot(directory, 0)
+    restored = api.SeizureEngine.restore(directory)
+    assert restored.steps == steps_at_snap
+    assert restored.megabatch == megabatch
+    assert restored.program.cfg == program.cfg
+    r_sessions = {p: restored.session(p) for p in range(n_sessions)}
+    assert all(s is not None for s in r_sessions.values())
+
+    tail_live = _run_ops(engine, sessions, ops[k:])
+    tail_restored = _run_ops(restored, r_sessions, ops[k:])
+    assert events_key(tail_restored) == events_key(tail_live), (
+        f"restored tail diverges from the snapshotting engine at "
+        f"megabatch={megabatch}, overlap={program.cfg.overlap}, k={k}"
+    )
+    assert events_key(head) + events_key(tail_restored) == events_key(full), (
+        f"snapshot/restore perturbed the event stream vs the "
+        f"uninterrupted oracle at megabatch={megabatch}, "
+        f"overlap={program.cfg.overlap}, k={k}"
+    )
+
+
+class TestSnapshotRestoreByteIdentity:
+    """3 sessions over 2 slots (eviction/admission churn), ragged
+    backlogs, snapshot at the schedule midpoint."""
+
+    @pytest.mark.parametrize("megabatch", [True, False])
+    def test_overlap0(self, program, chunk_pool, tmp_path, megabatch):
+        check_snapshot_restore(
+            program, chunk_pool, str(tmp_path), megabatch=megabatch, seed=21,
+        )
+
+    @pytest.mark.parametrize("megabatch", [True, False])
+    def test_overlap2(self, overlap_program, chunk_pool, tmp_path, megabatch):
+        check_snapshot_restore(
+            overlap_program, chunk_pool, str(tmp_path),
+            megabatch=megabatch, seed=22,
+        )
+
+    def test_restore_into_other_step_impl(self, program, chunk_pool, tmp_path):
+        # A megabatch snapshot restored into the serial-oracle engine
+        # (and the events still match): the EngineState layout is step-
+        # implementation independent, so operators can flip the step at
+        # restart without perturbing any stream.
+        n_sessions = 2
+        ops = _schedule(chunk_pool, n_sessions=n_sessions,
+                        chunks_per_session=(3, 2), seed=5)
+        k = len(ops) // 2
+        oracle = api.SeizureEngine(program, max_batch=2, megabatch=True)
+        full = _run_ops(
+            oracle,
+            {p: oracle.open_session(p) for p in range(n_sessions)}, ops,
+        )
+        engine = api.SeizureEngine(program, max_batch=2, megabatch=True)
+        sessions = {p: engine.open_session(p) for p in range(n_sessions)}
+        head = _run_ops(engine, sessions, ops[:k])
+        engine.snapshot(str(tmp_path), 0)
+        restored = api.SeizureEngine.restore(str(tmp_path), megabatch=False)
+        assert restored.megabatch is False
+        tail = _run_ops(
+            restored,
+            {p: restored.session(p) for p in range(n_sessions)}, ops[k:],
+        )
+        assert events_key(head) + events_key(tail) == events_key(full)
+
+    def test_restore_missing_dir_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError, match="no engine snapshots"):
+            api.SeizureEngine.restore(str(tmp_path / "never_written"))
+        (tmp_path / "empty").mkdir()
+        with pytest.raises(FileNotFoundError, match="no engine snapshots"):
+            api.SeizureEngine.restore(str(tmp_path / "empty"))
+
+
+class TestHotSwap:
+    def test_swap_serves_new_program_and_stamps_versions(
+        self, program, program_v2, chunk_pool, tmp_path
+    ):
+        quiet, pre = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=1)
+        session = engine.open_session(0)
+        session.push(pre)
+        ev_old = [e for e in engine.poll() if isinstance(e, api.ChunkScored)]
+        # Oracle per program: with overlap == 0 the frontend carries no
+        # consumed halo, so the stateless scorer on the same chunk must
+        # reproduce the served window predictions exactly.
+        want_old = np.asarray(engine.score_chunks(pre[None])[2][0])
+        version = engine.swap_program(program_v2)
+        assert version == 1 and engine.program_version == 1
+        want_new = np.asarray(engine.score_chunks(pre[None])[2][0])
+        session.push(pre)
+        ev_new = [e for e in engine.poll() if isinstance(e, api.ChunkScored)]
+        assert [e.program_version for e in ev_old] == [0]
+        assert [e.program_version for e in ev_new] == [1]
+        np.testing.assert_array_equal(ev_old[0].window_preds, want_old)
+        np.testing.assert_array_equal(ev_new[0].window_preds, want_new)
+        # The swap survives a snapshot/restore cycle: version and program
+        # both come back.
+        engine.snapshot(str(tmp_path), 3)
+        restored = api.SeizureEngine.restore(str(tmp_path))
+        assert restored.program_version == 1
+        np.testing.assert_array_equal(
+            np.asarray(restored.score_chunks(pre[None])[2][0]), want_new
+        )
+
+    def test_swap_preserves_alarm_continuity(
+        self, program, program_v2, chunk_pool
+    ):
+        # The k-of-m ring spans the swap: pre-swap votes keep counting
+        # toward post-swap alarms (no drain means no state reset).
+        quiet, pre = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=1)
+        twin = api.SeizureEngine(program, max_batch=1)
+        s, st = engine.open_session(0), twin.open_session(0)
+        for _ in range(2):
+            s.push(pre), st.push(pre)
+        a = [e.alarm for e in engine.poll() if isinstance(e, api.ChunkScored)]
+        b = [e.alarm for e in twin.poll() if isinstance(e, api.ChunkScored)]
+        assert a == b
+        engine.swap_program(program_v2)
+        # Rings were equal before the swap; the swapped engine's next
+        # alarm must be computed from the SAME carried ring (only the
+        # vote source changed).
+        ring_live = np.asarray(jax.device_get(engine._state.rings)[0])
+        ring_twin = np.asarray(jax.device_get(twin._state.rings)[0])
+        np.testing.assert_array_equal(ring_live, ring_twin)
+
+    def test_swap_cfg_mismatch_raises(self, program, overlap_program):
+        engine = api.SeizureEngine(program, max_batch=1)
+        with pytest.raises(ValueError, match="PipelineConfig"):
+            engine.swap_program(overlap_program)
+        assert engine.program_version == 0  # rejected swap bumps nothing
+
+    def test_swap_shape_mismatch_raises(self, program):
+        engine = api.SeizureEngine(program, max_batch=1)
+        packed = engine.program.packed
+        truncated = dataclasses.replace(
+            engine.program,
+            packed=forest_ops.PackedForest(
+                proj=packed.proj[:-1], thr=packed.thr[:-1],
+                leaf_probs=packed.leaf_probs[:-1],
+            ),
+        )
+        with pytest.raises(ValueError, match="mismatched leaves.*proj"):
+            engine.swap_program(truncated)
+        assert engine.program_version == 0
+
+
+class TestRecompileBudgets:
+    def test_swap_program_zero_recompiles(
+        self, program, program_v2, chunk_pool
+    ):
+        # The drain-free guarantee: swap + every poll after it on a warm
+        # engine compiles NOTHING (budget pinned at exactly 0).
+        budgets = load_budgets()
+        quiet, pre = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=2, replay_depth=1)
+        session = engine.open_session(0)
+        for _ in range(2):  # warm the step + splice caches
+            session.push(quiet)
+            engine.poll()
+        with CompileCounter() as cc:
+            engine.swap_program(program_v2)
+            for _ in range(3):
+                session.push(pre)
+                engine.poll()
+        assert cc.total <= budgets["engine_swap_program"], cc.by_name
+        assert budgets["engine_swap_program"] == 0
+
+    def test_restore_steady_state_zero_recompiles(
+        self, program, chunk_pool, tmp_path
+    ):
+        budgets = load_budgets()
+        quiet, _ = chunk_pool
+        engine = api.SeizureEngine(program, max_batch=2, replay_depth=1)
+        session = engine.open_session(0)
+        for _ in range(2):
+            session.push(quiet)
+            engine.poll()
+        engine.snapshot(str(tmp_path), 0)
+        # First restore may compile the (tiny) _install_state
+        # canonicalizer once per process; the budget pins the serving
+        # path: restore + serve in a warm process compiles NOTHING.
+        warm = api.SeizureEngine.restore(str(tmp_path))
+        warm.session(0).push(quiet)
+        warm.poll()
+        with CompileCounter() as cc:
+            restored = api.SeizureEngine.restore(str(tmp_path))
+            s = restored.session(0)
+            for _ in range(2):
+                s.push(quiet)
+                restored.poll()
+        assert cc.total <= budgets["engine_restore_steady_state"], cc.by_name
+        assert budgets["engine_restore_steady_state"] == 0
+
+
+class TestProgramLoad:
+    def test_load_missing_or_empty_dir_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError,
+                           match="no ScoringProgram checkpoints"):
+            api.ScoringProgram.load(str(tmp_path / "never_written"))
+        (tmp_path / "empty").mkdir()
+        with pytest.raises(FileNotFoundError,
+                           match="no ScoringProgram checkpoints"):
+            api.ScoringProgram.load(str(tmp_path / "empty"))
+
+    def test_load_skips_stale_tmp_dirs(self, program, tmp_path):
+        program.save(str(tmp_path), step=4)
+        stale = tmp_path / ".tmp_ckpt_leftover"
+        stale.mkdir()
+        (stale / "proj.npy").write_bytes(b"half-written")
+        loaded = api.ScoringProgram.load(str(tmp_path))
+        assert loaded.cfg == program.cfg
+        assert not stale.exists()  # garbage-collected by discovery
+
+
+class TestStreamingFrontendState:
+    def test_state_dict_roundtrip_byte_identical(
+        self, overlap_cfg, seam_stream
+    ):
+        # Feed half a stream (chunk-UNaligned split), serialize, resume
+        # in a fresh frontend: the remaining features must match the
+        # uninterrupted frontend byte for byte.
+        fe_a = frontend.StreamingFrontend(overlap_cfg)
+        fe_b = frontend.StreamingFrontend(overlap_cfg)
+        cut = 97  # mid-chunk: the partial buffer must ride the state
+        head = seam_stream[:cut]
+        tail = seam_stream[cut:]
+        fe_a.feed(head)
+        fe_b.feed(head)
+        resumed = frontend.StreamingFrontend(overlap_cfg)
+        resumed.load_state_dict(fe_a.state_dict())
+        assert resumed.pending_windows == fe_a.pending_windows
+        assert resumed.chunks_seen == fe_a.chunks_seen
+        np.testing.assert_array_equal(resumed.feed(tail), fe_b.feed(tail))
+
+    def test_width_mismatch_raises(self, overlap_cfg, signal_cfg):
+        fe = frontend.StreamingFrontend(overlap_cfg)  # width 2
+        plain = frontend.StreamingFrontend(signal_cfg)  # width 1
+        with pytest.raises(ValueError, match="boundary width"):
+            plain.load_state_dict(fe.state_dict())
+
+    def test_layout_mismatch_raises(self):
+        with pytest.raises(ValueError, match="layout mismatch"):
+            frontend.state_from_arrays({
+                "boundary": np.zeros((2, 3), np.float32),
+                "phase": np.zeros((), np.int32),
+            })
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis twin: drawn snapshot point, schedule, and engine geometry
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, strategies as st
+
+    @given(data=st.data())
+    def test_snapshot_restore_fuzzed(
+        program, overlap_program, chunk_pool, tmp_path, data
+    ):
+        use_overlap = data.draw(st.booleans(), label="overlap")
+        megabatch = data.draw(st.booleans(), label="megabatch")
+        depth = data.draw(st.sampled_from([1, 2, 4]), label="depth")
+        n_sessions = data.draw(st.integers(1, 3), label="n_sessions")
+        chunks = tuple(
+            data.draw(st.integers(1, 3), label=f"patient{p}_chunks")
+            for p in range(n_sessions)
+        )
+        seed = data.draw(st.integers(0, 2**16 - 1), label="schedule_seed")
+        max_batch = data.draw(st.integers(1, 2), label="max_batch")
+        ops = _schedule(chunk_pool, n_sessions=n_sessions,
+                        chunks_per_session=chunks, seed=seed)
+        snap_at = data.draw(
+            st.integers(0, len(ops) - 1), label="snapshot_at_op"
+        )
+        check_snapshot_restore(
+            overlap_program if use_overlap else program,
+            chunk_pool, str(tmp_path), megabatch=megabatch, seed=seed,
+            snap_at=snap_at, replay_depth=depth, max_batch=max_batch,
+            chunks_per_session=chunks,
+        )
+except ImportError:  # hypothesis is a CI dependency, not a runtime one
+    pass
